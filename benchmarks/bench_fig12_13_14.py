@@ -1,0 +1,116 @@
+"""Paper Fig. 12 (sample-efficiency curves), Fig. 13 (population
+distribution over generations), Fig. 14 (alpha sweep: capacity vs energy)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.core import CachedEvaluator, Objective, co_explore
+from repro.core.baselines import run_sa, run_two_step
+from repro.core.ga import HWSpace
+from repro.core.netlib import build
+
+from .common import COOPT_SAMPLES, POPULATION, Timer, emit
+
+FIG12_MODELS = ["resnet50", "googlenet", "randwire_a"]
+ALPHAS = [0.0005, 0.002, 0.008, 0.032]
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "runs/bench")
+
+
+def downsample(history: List, n: int = 200) -> List:
+    if len(history) <= n:
+        return [list(h) for h in history]
+    step = len(history) / n
+    return [list(history[int(i * step)]) for i in range(n)]
+
+
+def run_fig12(samples: int = COOPT_SAMPLES) -> Dict:
+    out = {}
+    for name in FIG12_MODELS:
+        g = build(name)
+        obj = Objective(metric="energy", alpha=0.002)
+        hw = HWSpace(mode="shared")
+        curves = {}
+        res = co_explore(g, mode="shared", alpha=0.002,
+                         sample_budget=samples, population=POPULATION,
+                         seed=0)
+        curves["cocco"] = downsample(res.history)
+        sa = run_sa(g, obj, hw, sample_budget=samples, seed=0)
+        curves["sa"] = downsample(sa.history)
+        for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
+            ts = run_two_step(g, obj, hw, sampler=sampler,
+                              capacity_samples=4,
+                              samples_per_capacity=max(samples // 4, 500),
+                              seed=0)
+            curves[tag] = downsample(ts.history)
+        out[name] = curves
+    return out
+
+
+def run_fig13(samples: int = COOPT_SAMPLES) -> Dict:
+    g = build("resnet50")
+    res = co_explore(g, mode="shared", alpha=0.002, sample_budget=samples,
+                     population=POPULATION, seed=0, log_populations=True)
+    return {"resnet50": [[list(p) for p in gen]
+                         for gen in res.population_log[:20]]}
+
+
+def run_fig14(samples: int = COOPT_SAMPLES) -> Dict:
+    out = {}
+    for name in ("resnet50", "googlenet", "randwire_a", "nasnet"):
+        g = build(name)
+        rows = []
+        for alpha in ALPHAS:
+            res = co_explore(g, mode="shared", alpha=alpha,
+                             sample_budget=max(samples // 2, 1000),
+                             population=POPULATION, seed=0)
+            rows.append({"alpha": alpha,
+                         "capacity_kb": res.acc.glb_bytes // 1024,
+                         "energy_pj": res.plan.energy_pj})
+        base = rows[0]["energy_pj"]
+        for r in rows:
+            r["energy_norm"] = r["energy_pj"] / base
+        out[name] = rows
+    return out
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    t = Timer()
+    f12 = run_fig12()
+    with open(os.path.join(OUT_DIR, "fig12_curves.json"), "w") as f:
+        json.dump(f12, f)
+    for name, curves in f12.items():
+        finals = {k: v[-1][1] for k, v in curves.items()}
+        best = min(finals.values())
+        emit(f"fig12.{name}", t.us,
+             " ".join(f"{k}={v / best:.3f}x" for k, v in finals.items()))
+
+    t = Timer()
+    f13 = run_fig13()
+    with open(os.path.join(OUT_DIR, "fig13_population.json"), "w") as f:
+        json.dump(f13, f)
+    gens = f13["resnet50"]
+    if gens:
+        first = sum(p[2] for p in gens[0]) / len(gens[0])
+        last = sum(p[2] for p in gens[-1]) / len(gens[-1])
+        emit("fig13.resnet50", t.us,
+             f"pop_mean_cost gen0={first:.3e} genN={last:.3e} "
+             f"centralized={last < first}")
+
+    t = Timer()
+    f14 = run_fig14()
+    with open(os.path.join(OUT_DIR, "fig14_alpha.json"), "w") as f:
+        json.dump(f14, f)
+    for name, rows in f14.items():
+        caps = [r["capacity_kb"] for r in rows]
+        ens = [r["energy_norm"] for r in rows]
+        emit(f"fig14.{name}", t.us,
+             f"alpha {ALPHAS[0]}->{ALPHAS[-1]}: capacity {caps[0]}KB->"
+             f"{caps[-1]}KB energy {ens[0]:.2f}->{ens[-1]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

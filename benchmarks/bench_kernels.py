@@ -1,0 +1,58 @@
+"""Kernel micro-bench: wall time of the Pallas kernels (interpret mode on
+CPU — correctness/structure, not TPU latency) vs the jnp reference, plus the
+derived FLOP counts that feed the §Roofline compute term."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention, fused_rmsnorm, fused_swiglu
+from repro.kernels import ref
+
+from .common import Timer, emit
+
+
+def timeit(fn, *args, n=3):
+    fn(*args)  # warm up / compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    B, H, S, d = 1, 4, 512, 64
+    q, k, v = (jax.random.normal(kk, (B, H, S, d), jnp.float32)
+               for kk in jax.random.split(key, 3))
+    flops_attn = 4 * B * H * S * S * d
+
+    us_kernel = timeit(lambda *a: flash_attention(*a, interpret=True), q, k, v)
+    us_ref = timeit(jax.jit(ref.attention_ref), q, k, v)
+    emit("kernel.flash_attention", us_kernel,
+         f"ref_us={us_ref:.0f} gflop={flops_attn / 1e9:.2f} "
+         f"interp_overhead={us_kernel / max(us_ref, 1):.1f}x")
+
+    M, dm, f = 256, 128, 512
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (M, dm))
+    wg = jax.random.normal(ks[1], (dm, f)) / jnp.sqrt(dm)
+    wi = jax.random.normal(ks[2], (dm, f)) / jnp.sqrt(dm)
+    wo = jax.random.normal(ks[3], (f, dm)) / jnp.sqrt(f)
+    us_kernel = timeit(lambda *a: fused_swiglu(*a, interpret=True),
+                       x, wg, wi, wo)
+    us_ref = timeit(jax.jit(ref.swiglu_ref), x, wg, wi, wo)
+    emit("kernel.fused_swiglu", us_kernel,
+         f"ref_us={us_ref:.0f} gflop={6 * M * dm * f / 1e9:.3f}")
+
+    scale = jnp.ones(dm)
+    us_kernel = timeit(lambda *a: fused_rmsnorm(*a, interpret=True), x, scale)
+    us_ref = timeit(jax.jit(ref.rmsnorm_ref), x, scale)
+    emit("kernel.fused_rmsnorm", us_kernel, f"ref_us={us_ref:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads runs/dryrun/*.json (produced by `python -m repro.launch.dryrun --all
+--out runs/dryrun`); if absent, runs two representative cells in a fresh
+subprocess (the 512-device XLA flag must be set before jax init, so the
+dry-run can never run inside this process)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+from .common import Timer, emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "runs/dryrun2")
+FALLBACK_CELLS = [("tinyllama-1.1b", "train_4k"), ("xlstm-350m", "decode_32k")]
+
+
+def load_rows() -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def ensure_rows() -> List[Dict]:
+    rows = load_rows()
+    if rows:
+        return rows
+    os.makedirs(DRYRUN_DIR, exist_ok=True)
+    for arch, shape in FALLBACK_CELLS:
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", "single", "--out", DRYRUN_DIR],
+            check=False,
+            env={**os.environ,
+                 "PYTHONPATH": os.environ.get("PYTHONPATH", "src")},
+        )
+    return load_rows()
+
+
+def main() -> None:
+    t = Timer()
+    rows = ensure_rows()
+    ok = [r for r in rows if "bottleneck" in r]
+    skipped = [r for r in rows if "skipped" in r]
+    failed = [r for r in rows if "error" in r]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", t.us,
+             f"tC={r['t_compute_ms']:.2f}ms tM={r['t_memory_ms']:.2f}ms "
+             f"tX={r['t_collective_ms']:.2f}ms bound={r['bottleneck']} "
+             f"frac={r['roofline_frac']:.3f} util={r['flops_util']:.3f}")
+    emit("roofline.summary", t.us,
+         f"{len(ok)} cells ok, {len(skipped)} documented skips, "
+         f"{len(failed)} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Paper Table 3: multi-core weight sharing x batch size, energy/latency/
+per-core buffer size under the energy-capacity co-opt configuration.
+
+Trends validated: (a) 1 -> 2 cores usually costs energy (NoC overhead),
+(b) per-core capacity drops with more cores, (c) latency grows sub-linearly
+with batch, (d) energy per batch amortizes weight traffic."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict
+
+from repro.core import AcceleratorConfig, co_explore
+from repro.core.netlib import build
+
+from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
+
+CORES = (1, 2, 4)
+BATCHES = (1, 2, 8)
+
+
+def table3_metrics(plan, acc: AcceleratorConfig, n: int, b: int) -> Dict:
+    """Energy(mJ)/latency(ms) for n weight-sharing cores and batch b.
+    Weights load from DRAM once per subgraph (reused across the batch) and
+    rotate across cores over the crossbar; activations scale with b."""
+    e_glb = acc.sram_pj_per_byte(acc.glb_bytes)
+    energy_pj = 0.0
+    lat_cycles = 0.0
+    for s in plan.subgraphs:
+        acts = s.ema_in + s.ema_out
+        w = s.ema_w
+        energy_pj += (w * acc.e_dram_pj_per_byte
+                      + b * acts * acc.e_dram_pj_per_byte
+                      + b * s.glb_access_bytes * e_glb
+                      + b * s.macs * acc.e_mac_pj
+                      + (n - 1) * w * acc.e_noc_pj_per_byte)
+        compute = b * s.macs / (acc.macs_per_cycle * n)
+        io = (w + b * acts) / acc.dram_bytes_per_cycle
+        lat_cycles += max(compute, io)
+    return {"energy_mj": energy_pj / 1e9,
+            "latency_ms": lat_cycles / acc.freq_hz * 1e3}
+
+
+def run(samples: int = COOPT_SAMPLES) -> Dict:
+    out = {}
+    for name in COOPT_MODELS:
+        g = build(name)
+        rows = {}
+        for n in CORES:
+            base = AcceleratorConfig(shared=True, weight_share_cores=n,
+                                     n_cores=n)
+            res = co_explore(g, mode="shared", metric="energy", alpha=0.002,
+                             base=base,
+                             sample_budget=max(samples // 2, 1000),
+                             population=POPULATION, seed=0)
+            for b in BATCHES:
+                m = table3_metrics(res.plan, res.acc, n, b)
+                m["size_kb"] = res.acc.glb_bytes // 1024
+                rows[(n, b)] = m
+        out[name] = rows
+    return out
+
+
+def main() -> None:
+    res = run()
+    for name, rows in res.items():
+        t = Timer()
+        e11, e21 = rows[(1, 1)]["energy_mj"], rows[(2, 1)]["energy_mj"]
+        l11, l18 = rows[(1, 1)]["latency_ms"], rows[(1, 8)]["latency_ms"]
+        s1, s4 = rows[(1, 1)]["size_kb"], rows[(4, 1)]["size_kb"]
+        emit(f"table3.{name}", t.us,
+             f"E(1c)={e11:.2f}mJ E(2c)={e21:.2f}mJ | "
+             f"lat b1={l11:.2f}ms b8={l18:.2f}ms "
+             f"(x{l18 / max(l11, 1e-9):.1f} sub-linear<8) | "
+             f"size 1c={s1}KB 4c={s4}KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Tables 1-2: hardware-mapping co-exploration with separate / shared
+buffers.  Methods: fixed-HW (S/M/L) + partition-only, two-step RS+GA / GS+GA,
+co-opt SA and Cocco.  Cost = Formula 2 (BUF_SIZE + alpha * energy),
+alpha = 0.002, energy metric.  Claim: co-opt (Cocco) <= two-step <= fixed."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Dict
+
+from repro.core import AcceleratorConfig, CachedEvaluator, Objective, co_explore, partition_only
+from repro.core.baselines import run_sa, run_two_step
+from repro.core.ga import HWSpace
+from repro.core.netlib import build
+
+from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
+
+KB = 1024
+ALPHA = 0.002
+
+FIXED = {
+    "separate": {"S": (512 * KB, 576 * KB), "M": (1024 * KB, 1152 * KB),
+                 "L": (2048 * KB, 2304 * KB)},
+    "shared": {"S": (576 * KB, 0), "M": (1152 * KB, 0), "L": (2304 * KB, 0)},
+}
+
+
+def final_cost(g, acc, ev, samples) -> float:
+    """Paper §5.3.1: after choosing HW, run partition-only and report
+    Formula-2 cost at that hardware point."""
+    res = partition_only(g, acc, metric="energy",
+                         sample_budget=samples, population=POPULATION,
+                         seed=1, ev=ev)
+    return acc.buf_size_total + ALPHA * res.plan.energy_pj
+
+
+def run_model(name: str, mode: str, samples: int) -> Dict:
+    g = build(name)
+    ev = CachedEvaluator(g)
+    obj = Objective(metric="energy", alpha=ALPHA)
+    out: Dict[str, Dict] = {}
+    part_budget = max(samples // 2, 1000)
+
+    for tag, (a, w) in FIXED[mode].items():
+        acc = AcceleratorConfig(glb_bytes=a, wbuf_bytes=w,
+                                shared=(mode == "shared"))
+        out[f"fixed_{tag}"] = {
+            "glb_kb": a // KB, "wbuf_kb": w // KB,
+            "cost": final_cost(g, acc, ev, part_budget),
+        }
+
+    hw = HWSpace(mode=mode)
+    for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
+        res = run_two_step(g, obj, hw, sampler=sampler,
+                           capacity_samples=4,
+                           samples_per_capacity=max(samples // 4, 500),
+                           seed=2)
+        acc = res.best.acc
+        out[tag] = {"glb_kb": acc.glb_bytes // KB,
+                    "wbuf_kb": acc.wbuf_bytes // KB,
+                    "cost": final_cost(g, acc, ev, part_budget)}
+
+    res = run_sa(g, obj, hw, sample_budget=samples, seed=3, ev=ev)
+    out["sa"] = {"glb_kb": res.best.acc.glb_bytes // KB,
+                 "wbuf_kb": res.best.acc.wbuf_bytes // KB,
+                 "cost": final_cost(g, res.best.acc, ev, part_budget)}
+
+    cres = co_explore(g, mode=mode, metric="energy", alpha=ALPHA,
+                      sample_budget=samples, population=POPULATION,
+                      seed=4, ev=ev)
+    out["cocco"] = {"glb_kb": cres.acc.glb_bytes // KB,
+                    "wbuf_kb": cres.acc.wbuf_bytes // KB,
+                    "cost": final_cost(g, cres.acc, ev, part_budget)}
+    return out
+
+
+def run(mode: str, samples: int = COOPT_SAMPLES) -> Dict:
+    return {m: run_model(m, mode, samples) for m in COOPT_MODELS}
+
+
+def main() -> None:
+    for mode, table in (("separate", "table1"), ("shared", "table2")):
+        res = run(mode)
+        for name, methods in res.items():
+            t = Timer()
+            best_base = min(v["cost"] for k, v in methods.items()
+                            if k != "cocco")
+            c = methods["cocco"]["cost"]
+            emit(f"{table}.{name}", t.us,
+                 f"cocco={c:.3e} best_baseline={best_base:.3e} "
+                 f"improvement={(1 - c / best_base) * 100:.1f}% "
+                 f"size={methods['cocco']['glb_kb']}KB+"
+                 f"{methods['cocco']['wbuf_kb']}KB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Shared benchmark utilities.
+
+Budgets default to a reduced mode so `python -m benchmarks.run` finishes on a
+laptop; set REPRO_BENCH_FULL=1 to use the paper's sample counts (400k
+partition / 50k co-opt samples).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+from typing import Dict, List
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+PARTITION_SAMPLES = 400_000 if FULL else 2_500
+COOPT_SAMPLES = 50_000 if FULL else 1_500
+POPULATION = 500 if FULL else 40
+GREEDY_EVALS = 10**9 if FULL else 5_000
+ENUM_STATES = 2_000_000 if FULL else 60_000
+
+SMALL_MODELS = ["vgg16", "resnet50", "googlenet", "nasnet"]
+LARGE_MODELS = ["resnet152", "transformer", "gpt", "randwire_a", "randwire_b"]
+COOPT_MODELS = ["resnet50", "googlenet", "randwire_a", "nasnet"]
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    @property
+    def us(self) -> float:
+        return (time.time() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}")
+
+
+def fmt_mb(x: float) -> str:
+    return f"{x / 1e6:.2f}MB"

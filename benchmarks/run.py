@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig11,...]
+
+Reduced sample budgets by default (REPRO_BENCH_FULL=1 for the paper's
+400k/50k budgets).  Emits `name,us_per_call,derived` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (
+    bench_fig3,
+    bench_fig11,
+    bench_fig12_13_14,
+    bench_kernels,
+    bench_roofline,
+    bench_table3,
+    bench_tables12,
+)
+
+BENCHES = {
+    "fig3": bench_fig3.main,
+    "fig11": bench_fig11.main,
+    "tables12": bench_tables12.main,
+    "fig12_13_14": bench_fig12_13_14.main,
+    "table3": bench_table3.main,
+    "kernels": bench_kernels.main,
+    "roofline": bench_roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            BENCHES[name]()
+        except Exception as e:
+            failures += 1
+            print(f"{name}.ERROR,{(time.time() - t0) * 1e6:.0f},"
+                  f"{type(e).__name__}: {e}")
+            traceback.print_exc()
+        print(f"{name}.total,{(time.time() - t0) * 1e6:.0f},done")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

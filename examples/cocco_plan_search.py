@@ -1,0 +1,28 @@
+"""Cocco as the TPU execution planner (DESIGN.md §3): co-explore the fusion
+partition + VMEM working set for each assigned architecture's transformer
+block and print the resulting execution plans.
+
+    PYTHONPATH=src python examples/cocco_plan_search.py [--arch glm4-9b]
+"""
+
+import argparse
+
+from repro.configs import ARCHS, get_config
+from repro.core.tpu_adapter import plan_architecture
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default=None,
+                    help="default: all archs")
+    ap.add_argument("--samples", type=int, default=2000)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCHS
+    for arch in archs:
+        cfg = get_config(arch)
+        plan = plan_architecture(cfg, sample_budget=args.samples)
+        print(plan.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .io import checkpoint_steps, load_checkpoint, save_checkpoint
+from .manager import CheckpointConfig, CheckpointManager, reshard_to
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,126 @@
+"""Atomic sharded checkpoints (fault-tolerance substrate).
+
+Layout:  <dir>/step_<N>/
+            meta.json            — step, tree structure, shapes/dtypes, hash
+            arrays_<k>.npz       — leaf shards (chunked to cap file size)
+            _COMMITTED           — written last; a checkpoint without the
+                                   marker is ignored (crash-safe)
+
+Writes go to ``step_<N>.tmp.<pid>`` then ``os.rename`` (atomic on POSIX), so
+a process killed mid-save can never corrupt the latest checkpoint — the
+restart-safety property the runtime layer depends on.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+MAX_SHARD_BYTES = 512 << 20
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return items, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    extra_meta: Optional[Dict] = None) -> str:
+    """Blocking save; returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp.",
+                           dir=directory)
+    items, _ = _flatten(tree)
+    # chunk leaves into npz shards
+    shards: List[Dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    index: Dict[str, int] = {}
+    for name, leaf in items:
+        arr = np.asarray(leaf)
+        if sizes[-1] + arr.nbytes > MAX_SHARD_BYTES and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+        shards[-1][name] = arr
+        sizes[-1] += arr.nbytes
+        index[name] = len(shards) - 1
+    digest = hashlib.sha256()
+    for i, shard in enumerate(shards):
+        path = os.path.join(tmp, f"arrays_{i}.npz")
+        np.savez(path, **shard)
+        with open(path, "rb") as f:
+            digest.update(f.read())
+    meta = {
+        "step": step,
+        "index": index,
+        "n_shards": len(shards),
+        "leaves": {n: {"shape": list(np.asarray(l).shape),
+                       "dtype": str(np.asarray(l).dtype)}
+                   for n, l in items},
+        "sha256": digest.hexdigest(),
+        "extra": extra_meta or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def checkpoint_steps(directory: str) -> List[int]:
+    """Committed checkpoints, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp." not in name:
+            if os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    template=None, verify: bool = True):
+    """Returns (tree, meta).  With ``template``, leaves are restored into the
+    template's tree structure (and resharded to its shapes if the leading
+    dimension layout changed — see manager.reshard)."""
+    steps = checkpoint_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if verify:
+        digest = hashlib.sha256()
+        for i in range(meta["n_shards"]):
+            with open(os.path.join(path, f"arrays_{i}.npz"), "rb") as f:
+                digest.update(f.read())
+        if digest.hexdigest() != meta["sha256"]:
+            raise IOError(f"checkpoint {path} failed hash verification")
+    arrays: Dict[str, np.ndarray] = {}
+    for i in range(meta["n_shards"]):
+        with np.load(os.path.join(path, f"arrays_{i}.npz")) as z:
+            for k in z.files:
+                arrays[k] = z[k]
+    if template is None:
+        return arrays, meta
+    items, treedef = _flatten(template)
+    leaves = []
+    for name, tmpl_leaf in items:
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        leaves.append(arrays[name])
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, meta

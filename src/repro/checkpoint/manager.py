@@ -1,0 +1,88 @@
+"""Checkpoint manager: retention, resume, async save, elastic resharding."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from .io import checkpoint_steps, load_checkpoint, save_checkpoint
+
+
+@dataclass
+class CheckpointConfig:
+    directory: str
+    save_every: int = 100
+    keep_last: int = 3
+    keep_every: int = 0            # additionally keep every k-th (0 = off)
+    async_save: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(cfg.directory, exist_ok=True)
+
+    # -- save --------------------------------------------------------------
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.cfg.save_every == 0
+
+    def save(self, step: int, tree, extra_meta: Optional[Dict] = None,
+             blocking: Optional[bool] = None) -> None:
+        """Device->host transfer happens synchronously (snapshot semantics);
+        the file write runs on a background thread unless blocking."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            save_checkpoint(self.cfg.directory, step, host_tree, extra_meta)
+            self._retain()
+
+        if blocking or not self.cfg.async_save:
+            work()
+        else:
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _retain(self):
+        steps = checkpoint_steps(self.cfg.directory)
+        keep = set(steps[-self.cfg.keep_last:])
+        if self.cfg.keep_every:
+            keep |= {s for s in steps if s % self.cfg.keep_every == 0}
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(os.path.join(self.cfg.directory,
+                                           f"step_{s:08d}"),
+                              ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = checkpoint_steps(self.cfg.directory)
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None):
+        return load_checkpoint(self.cfg.directory, step, template)
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding: restore a checkpoint into a different mesh/device count
+# ---------------------------------------------------------------------------
+
+def reshard_to(tree, shardings):
+    """Place host arrays according to new shardings (elastic restart after a
+    mesh-shape change: the host holds full arrays, jax.device_put splits them
+    for the new topology)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+        tree, shardings)

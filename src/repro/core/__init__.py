@@ -1,0 +1,39 @@
+"""Cocco core: graph-level memory scheme + hardware-mapping co-exploration.
+
+The paper's primary contribution (ASPLOS'24).  See DESIGN.md §1–2.
+"""
+
+from .cocco import CoccoResult, co_explore, partition_only
+from .cost import (
+    GLB_CANDIDATES,
+    SHARED_CANDIDATES,
+    WBUF_CANDIDATES,
+    AcceleratorConfig,
+    CachedEvaluator,
+    PlanCost,
+    SubgraphCost,
+    evaluate_partition,
+    evaluate_subgraph,
+)
+from .ga import Genome, HWSpace, Objective, SearchResult, run_ga
+from .graph import FULL, SLIDING, Edge, Graph, Node, sequential_graph
+from .memory import (
+    FootprintReport,
+    Region,
+    RegionTable,
+    build_region_table,
+    subgraph_footprint,
+)
+from .partition import (
+    groups_of,
+    is_valid,
+    normalize,
+    partition_of,
+    random_partition,
+    singleton_partition,
+    split_to_fit,
+)
+from .simulate import DeadlockError, SimResult, simulate_subgraph
+from .tiling import SubgraphSchedule, TensorSchedule, derive_schedule
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,104 @@
+"""High-level Cocco API (paper Fig. 10).
+
+``co_explore``     — Formula 2: joint (partition, memory-config) search.
+``partition_only`` — Formula 1: partition under a fixed accelerator.
+
+Both return a :class:`CoccoResult` carrying the chosen plan, hardware point,
+per-subgraph costs, and the convergence history for sample-efficiency plots.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Set, Tuple
+
+from .cost import AcceleratorConfig, CachedEvaluator, PlanCost
+from .ga import Genome, HWSpace, Objective, SearchResult, run_ga
+from .graph import Graph
+
+
+@dataclass
+class CoccoResult:
+    graph: str
+    groups: List[Set[int]]
+    acc: AcceleratorConfig
+    plan: PlanCost
+    cost: float
+    objective: Objective
+    history: List[Tuple[int, float]]
+    samples: int
+    population_log: List = field(default_factory=list)
+
+    @property
+    def n_subgraphs(self) -> int:
+        return len(self.groups)
+
+    def summary(self) -> str:
+        bw = self.plan.avg_bandwidth() / 1e9
+        return (
+            f"{self.graph}: {self.n_subgraphs} subgraphs | "
+            f"cost={self.cost:.4g} | EMA={self.plan.ema_total/1e6:.2f} MB | "
+            f"energy={self.plan.energy_pj/1e9:.3f} mJ | "
+            f"avg BW={bw:.2f} GB/s | "
+            f"GLB={self.acc.glb_bytes//1024}KB"
+            + ("" if self.acc.shared else
+               f" WBUF={self.acc.wbuf_bytes//1024}KB")
+        )
+
+
+def _result(g: Graph, res: SearchResult, obj: Objective) -> CoccoResult:
+    best = res.best
+    return CoccoResult(
+        graph=g.name,
+        groups=best.groups,
+        acc=best.acc,
+        plan=best.plan,
+        cost=best.cost,
+        objective=obj,
+        history=res.history,
+        samples=res.samples,
+        population_log=res.population_log,
+    )
+
+
+def partition_only(
+    g: Graph,
+    acc: Optional[AcceleratorConfig] = None,
+    metric: str = "ema",
+    sample_budget: int = 50_000,
+    population: int = 100,
+    seed: int = 0,
+    out_tile: int = 1,
+    ev: Optional[CachedEvaluator] = None,
+    **ga_kw,
+) -> CoccoResult:
+    acc = acc or AcceleratorConfig()
+    obj = Objective(metric=metric, alpha=None)
+    hw = HWSpace(mode="fixed", base=acc)
+    res = run_ga(g, obj, hw, sample_budget=sample_budget,
+                 population=population, seed=seed, out_tile=out_tile,
+                 ev=ev, **ga_kw)
+    return _result(g, res, obj)
+
+
+def co_explore(
+    g: Graph,
+    mode: str = "separate",              # "separate" | "shared"
+    metric: str = "energy",
+    alpha: float = 0.002,
+    base: Optional[AcceleratorConfig] = None,
+    sample_budget: int = 50_000,
+    population: int = 100,
+    seed: int = 0,
+    out_tile: int = 1,
+    log_populations: bool = False,
+    ev: Optional[CachedEvaluator] = None,
+    **ga_kw,
+) -> CoccoResult:
+    base = base or AcceleratorConfig()
+    obj = Objective(metric=metric, alpha=alpha)
+    hw = HWSpace(mode=mode, base=base)
+    res = run_ga(g, obj, hw, sample_budget=sample_budget,
+                 population=population, seed=seed, out_tile=out_tile,
+                 log_populations=log_populations, ev=ev, **ga_kw)
+    return _result(g, res, obj)

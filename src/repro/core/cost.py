@@ -1,0 +1,300 @@
+"""Accelerator cost model (paper §5.1.2): a Simba-like NPU core.
+
+4x4 PEs x 8x8 MACs = 1024 MACs/cycle @ 1 GHz (2 TOPS), a global (activation)
+buffer and a weight buffer (or one shared buffer), 16 GB/s DRAM, 12.5 pJ/bit
+DRAM energy.  Weights of the *next* subgraph are prefetched during the current
+subgraph's compute; subgraph latency = max(compute cycles, IO cycles).
+
+Per-subgraph external memory access (EMA):
+  * input activations crossing into the subgraph      (loaded once — full reuse),
+  * output activations needed outside                  (stored once),
+  * weights of the subgraph's layers                   (loaded once).
+
+Feasibility rules (documented deviations in DESIGN.md §8):
+  * activation footprint (consumption-centric allocations, incl. external
+    input buffers) must fit the global buffer,
+  * multi-layer subgraphs keep all member weights resident: sum of weights
+    must fit the weight buffer; single-layer subgraphs may stream weights
+    (reloading them once per row-block sweep if the input cannot be held).
+
+Energy = DRAM traffic + buffer accesses (capacity-dependent pJ/B from an
+ARM-memory-compiler-style sqrt model) + MAC energy.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .graph import FULL, Graph
+from .memory import subgraph_footprint
+from .tiling import derive_schedule
+
+KB = 1024
+MB = 1024 * 1024
+
+
+@dataclass(frozen=True)
+class AcceleratorConfig:
+    """Hardware point being evaluated (the DSE genome's HW half)."""
+
+    glb_bytes: int = 1 * MB              # global (activation) buffer
+    wbuf_bytes: int = int(1.125 * MB)    # weight buffer
+    shared: bool = False                 # one buffer for acts + weights
+    macs_per_cycle: int = 1024           # 4x4 PEs x 8x8 MACs
+    freq_hz: float = 1e9
+    dram_bytes_per_sec: float = 16e9
+    e_dram_pj_per_byte: float = 100.0    # 12.5 pJ/bit
+    e_mac_pj: float = 0.05               # INT8 MAC @ 12nm
+    n_cores: int = 1
+    e_noc_pj_per_byte: float = 2.0       # core-to-core crossbar (Arteris-like)
+    weight_share_cores: int = 1          # §5.4.2: cores hold 1/n of weights
+
+    @property
+    def buf_size_total(self) -> int:
+        return self.glb_bytes if self.shared else self.glb_bytes + self.wbuf_bytes
+
+    def sram_pj_per_byte(self, capacity_bytes: int) -> float:
+        """Access energy grows ~sqrt(capacity) (bank/wire scaling)."""
+        return 0.2 + 0.25 * math.sqrt(max(capacity_bytes, 1) / (64 * KB))
+
+    @property
+    def dram_bytes_per_cycle(self) -> float:
+        return self.dram_bytes_per_sec / self.freq_hz
+
+
+# paper's search grids (§5.3.1)
+GLB_CANDIDATES = [k * KB for k in range(128, 2048 + 1, 64)]
+WBUF_CANDIDATES = [k * KB for k in range(144, 2304 + 1, 72)]
+SHARED_CANDIDATES = [k * KB for k in range(128, 3072 + 1, 64)]
+
+
+@dataclass
+class SubgraphCost:
+    nodes: Tuple[int, ...]
+    ema_in: int = 0
+    ema_out: int = 0
+    ema_w: int = 0
+    macs: int = 0
+    footprint: int = 0
+    weight_resident: int = 0
+    glb_access_bytes: int = 0
+    wbuf_access_bytes: int = 0
+    feasible: bool = True
+    reason: str = ""
+
+    @property
+    def ema_total(self) -> int:
+        return self.ema_in + self.ema_out + self.ema_w
+
+    def compute_cycles(self, acc: AcceleratorConfig) -> float:
+        return self.macs / acc.macs_per_cycle
+
+    def io_cycles(self, acc: AcceleratorConfig) -> float:
+        return self.ema_total / acc.dram_bytes_per_cycle
+
+    def latency_cycles(self, acc: AcceleratorConfig) -> float:
+        return max(self.compute_cycles(acc), self.io_cycles(acc))
+
+    def energy_pj(self, acc: AcceleratorConfig) -> float:
+        if acc.shared:
+            e_glb = acc.sram_pj_per_byte(acc.glb_bytes)
+            e_w = e_glb
+        else:
+            e_glb = acc.sram_pj_per_byte(acc.glb_bytes)
+            e_w = acc.sram_pj_per_byte(acc.wbuf_bytes)
+        return (
+            self.ema_total * acc.e_dram_pj_per_byte
+            + self.glb_access_bytes * e_glb
+            + self.wbuf_access_bytes * e_w
+            + self.macs * acc.e_mac_pj
+        )
+
+
+@dataclass
+class PlanCost:
+    """Aggregate cost of a full partition plan (paper Formulas 1 & 2)."""
+
+    subgraphs: List[SubgraphCost]
+    acc: AcceleratorConfig
+
+    @property
+    def feasible(self) -> bool:
+        return all(s.feasible for s in self.subgraphs)
+
+    @property
+    def ema_total(self) -> int:
+        return sum(s.ema_total for s in self.subgraphs)
+
+    @property
+    def energy_pj(self) -> float:
+        return sum(s.energy_pj(self.acc) for s in self.subgraphs)
+
+    @property
+    def latency_cycles(self) -> float:
+        return sum(s.latency_cycles(self.acc) for s in self.subgraphs)
+
+    @property
+    def latency_s(self) -> float:
+        return self.latency_cycles / self.acc.freq_hz
+
+    def avg_bandwidth(self) -> float:
+        """bytes/s sustained over the whole network."""
+        lat = self.latency_s
+        return self.ema_total / lat if lat > 0 else 0.0
+
+    def peak_bandwidth(self) -> float:
+        """max over subgraphs of (act IO + next subgraph's weight prefetch) /
+        subgraph latency (paper Fig. 3 caption)."""
+        peak = 0.0
+        for i, s in enumerate(self.subgraphs):
+            nxt_w = (self.subgraphs[i + 1].ema_w
+                     if i + 1 < len(self.subgraphs) else 0)
+            lat = s.latency_cycles(self.acc) / self.acc.freq_hz
+            if lat > 0:
+                peak = max(peak, (s.ema_in + s.ema_out + nxt_w) / lat)
+        return peak
+
+    def metric(self, name: str) -> float:
+        if name == "ema":
+            return float(self.ema_total)
+        if name == "energy":
+            return self.energy_pj
+        if name == "latency":
+            return self.latency_cycles
+        raise ValueError(name)
+
+
+def evaluate_subgraph(
+    g: Graph,
+    nodes: Set[int],
+    acc: AcceleratorConfig,
+    consumers_outside: Optional[Dict[int, int]] = None,
+    out_tile: int = 1,
+) -> SubgraphCost:
+    """Cost one subgraph. ``consumers_outside[t]`` = number of later subgraphs
+    reading tensor t (re-reads cost EMA each time; charged at the reader)."""
+    nodes = set(nodes)
+    sc = SubgraphCost(nodes=tuple(sorted(nodes)))
+    sc.macs = sum(g.nodes[v].macs for v in nodes)
+    sc.weight_resident = sum(g.nodes[v].weight_bytes for v in nodes)
+
+    # ---- EMA ------------------------------------------------------------
+    ext_in = {e.src for e in g.boundary_in(nodes)}
+    sc.ema_in = sum(g.nodes[t].out_bytes for t in ext_in)
+    out_tensors = {e.src for e in g.boundary_out(nodes)}
+    out_tensors |= {v for v in nodes if g.nodes[v].is_output}
+    sc.ema_out = sum(g.nodes[t].out_bytes for t in out_tensors)
+    sc.ema_w = sc.weight_resident
+
+    # ---- feasibility ------------------------------------------------------
+    try:
+        sched = derive_schedule(g, nodes, out_tile=out_tile)
+    except ValueError as err:
+        sc.feasible = False
+        sc.reason = f"schedule: {err}"
+        return sc
+    fp = subgraph_footprint(g, nodes, schedule=sched)
+    sc.footprint = fp.total_bytes
+
+    glb_cap = acc.glb_bytes
+    wbuf_cap = acc.glb_bytes if acc.shared else acc.wbuf_bytes
+    # multi-core weight sharing (§5.4.2): each core buffers 1/n of the weights
+    sc.weight_resident = sc.weight_resident // max(acc.weight_share_cores, 1)
+    if acc.shared:
+        if sc.footprint + sc.weight_resident > glb_cap:
+            if len(nodes) > 1:
+                sc.feasible = False
+                sc.reason = "shared buffer overflow"
+            else:
+                _stream_single_layer(g, nodes, sc, glb_cap)
+    else:
+        if sc.footprint > glb_cap:
+            if len(nodes) > 1:
+                sc.feasible = False
+                sc.reason = "global buffer overflow"
+            else:
+                _stream_single_layer(g, nodes, sc, glb_cap)
+        if sc.feasible and len(nodes) > 1 and sc.weight_resident > wbuf_cap:
+            sc.feasible = False
+            sc.reason = "weight buffer overflow"
+        if sc.feasible and len(nodes) == 1 and sc.weight_resident > wbuf_cap:
+            pass  # single layer streams weights (already loaded once)
+
+    # ---- on-chip access traffic ------------------------------------------
+    # each produced byte written once; each byte read ~F/s times per consumer
+    glb = 0
+    for t, ts in sched.tensors.items():
+        b = g.nodes[t].out_bytes
+        glb += b  # write (from DRAM or from PE)
+        for e in g.edges:
+            if e.src == t and e.dst in nodes:
+                amp = (e.F / e.s) if e.kind != FULL else 1.0
+                glb += int(b * amp)
+    sc.glb_access_bytes = glb
+    sc.wbuf_access_bytes = sc.weight_resident  # one streaming pass per sweep
+    return sc
+
+
+def _stream_single_layer(g: Graph, nodes: Set[int], sc: SubgraphCost,
+                         glb_cap: int) -> None:
+    """Single layer whose line-buffer footprint exceeds the buffer: sweep the
+    output in row blocks; weights are re-streamed once per block."""
+    (v,) = tuple(nodes)
+    n_blocks = max(1, math.ceil(sc.footprint / max(glb_cap, 1)))
+    sc.ema_w = sc.weight_resident * n_blocks
+    sc.footprint = min(sc.footprint, glb_cap)
+    sc.reason = f"streamed in {n_blocks} blocks"
+
+
+def evaluate_partition(
+    g: Graph,
+    groups: Sequence[Set[int]],
+    acc: AcceleratorConfig,
+    out_tile: int = 1,
+) -> PlanCost:
+    """Cost a full plan: ``groups`` in execution order."""
+    # count cross-subgraph readers per tensor (multi-reader tensors are
+    # re-loaded by each reading subgraph; charged naturally since each group's
+    # ema_in includes every external tensor it touches)
+    subs = [evaluate_subgraph(g, set(s), acc, out_tile=out_tile)
+            for s in groups]
+    return PlanCost(subgraphs=subs, acc=acc)
+
+
+class CachedEvaluator:
+    """Memoizes per-subgraph costs across a whole search run.
+
+    The schedule/footprint half depends only on the node set; the feasibility/
+    streaming half also depends on the accelerator config, so the cache key is
+    (frozenset(nodes), glb, wbuf, shared).  GA populations re-evaluate mostly
+    unchanged subgraphs, giving ~2 orders of magnitude speedup.
+    """
+
+    def __init__(self, g: Graph, out_tile: int = 1) -> None:
+        self.g = g
+        self.out_tile = out_tile
+        self._cache: Dict[Tuple, SubgraphCost] = {}
+        self.evaluations = 0   # cache misses (true cost-model invocations)
+        self.lookups = 0
+
+    def _key(self, nodes: frozenset, acc: AcceleratorConfig) -> Tuple:
+        return (nodes, acc.glb_bytes, acc.wbuf_bytes, acc.shared,
+                acc.weight_share_cores)
+
+    def subgraph(self, nodes: Set[int], acc: AcceleratorConfig) -> SubgraphCost:
+        fs = frozenset(nodes)
+        key = self._key(fs, acc)
+        self.lookups += 1
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = evaluate_subgraph(self.g, set(fs), acc, out_tile=self.out_tile)
+            self._cache[key] = hit
+            self.evaluations += 1
+        return hit
+
+    def plan(self, groups: Sequence[Set[int]], acc: AcceleratorConfig) -> PlanCost:
+        return PlanCost(
+            subgraphs=[self.subgraph(s, acc) for s in groups], acc=acc
+        )

@@ -1,0 +1,341 @@
+"""Genetic co-exploration engine (paper §4.3–4.4, Fig. 9–10).
+
+Genome = (partition scheme, memory configuration).  Operators:
+
+* crossover (Fig. 9b): walk layers in topological order; each undecided layer
+  picks a random parent and reproduces that parent's whole subgraph; already-
+  decided members are either split out (Child-1) or merged into one of their
+  subgraphs (Child-2) — chosen at random.  HW genes average-then-snap.
+* mutations (Fig. 9c-e + DSE): modify-node, split-subgraph, merge-subgraph,
+  mutation-DSE (normal perturbation snapped to the candidate grid).
+* evaluation with in-situ split repair (§4.4.4) written back Lamarckian-style,
+* tournament selection (§4.4.5) with elitism.
+
+Fitness = -(cost); cost is Formula 1 (partition-only) or Formula 2
+(``BUF_SIZE + alpha * sum_i Cost_M(subgraph_i)``).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from .cost import (
+    GLB_CANDIDATES,
+    SHARED_CANDIDATES,
+    WBUF_CANDIDATES,
+    AcceleratorConfig,
+    CachedEvaluator,
+    PlanCost,
+)
+from .graph import Graph
+from .partition import (
+    groups_of,
+    normalize,
+    random_partition,
+    singleton_partition,
+    split_group_topo,
+    split_to_fit,
+)
+
+
+# ---------------------------------------------------------------------------
+# objective
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Objective:
+    """What the search minimizes."""
+
+    metric: str = "energy"          # "ema" | "energy" | "latency"
+    alpha: Optional[float] = None   # None => Formula 1 (partition-only)
+
+    def cost(self, plan: PlanCost, acc: AcceleratorConfig) -> float:
+        m = plan.metric(self.metric)
+        if self.alpha is None:
+            return m
+        return acc.buf_size_total + self.alpha * m
+
+
+@dataclass(frozen=True)
+class HWSpace:
+    """Memory design space (paper §5.3.1)."""
+
+    mode: str = "fixed"             # "fixed" | "separate" | "shared"
+    base: AcceleratorConfig = field(default_factory=AcceleratorConfig)
+    glb_candidates: Tuple[int, ...] = tuple(GLB_CANDIDATES)
+    wbuf_candidates: Tuple[int, ...] = tuple(WBUF_CANDIDATES)
+    shared_candidates: Tuple[int, ...] = tuple(SHARED_CANDIDATES)
+
+    def sample(self, rng: random.Random) -> AcceleratorConfig:
+        if self.mode == "fixed":
+            return self.base
+        if self.mode == "separate":
+            return replace(
+                self.base,
+                glb_bytes=rng.choice(self.glb_candidates),
+                wbuf_bytes=rng.choice(self.wbuf_candidates),
+                shared=False,
+            )
+        if self.mode == "shared":
+            return replace(
+                self.base,
+                glb_bytes=rng.choice(self.shared_candidates),
+                wbuf_bytes=0,
+                shared=True,
+            )
+        raise ValueError(self.mode)
+
+    @staticmethod
+    def _snap(value: float, cands: Sequence[int]) -> int:
+        return min(cands, key=lambda c: abs(c - value))
+
+    def blend(self, a: AcceleratorConfig, b: AcceleratorConfig,
+              rng: random.Random) -> AcceleratorConfig:
+        """Crossover of HW genes: average, snapped to the grid (§4.4.2)."""
+        if self.mode == "fixed":
+            return self.base
+        if self.mode == "separate":
+            return replace(
+                a,
+                glb_bytes=self._snap((a.glb_bytes + b.glb_bytes) / 2,
+                                     self.glb_candidates),
+                wbuf_bytes=self._snap((a.wbuf_bytes + b.wbuf_bytes) / 2,
+                                      self.wbuf_candidates),
+            )
+        return replace(
+            a,
+            glb_bytes=self._snap((a.glb_bytes + b.glb_bytes) / 2,
+                                 self.shared_candidates),
+        )
+
+    def mutate(self, acc: AcceleratorConfig, rng: random.Random,
+               sigma_steps: float = 3.0) -> AcceleratorConfig:
+        """mutation-DSE: normal perturbation around the current value (§4.4.3)."""
+        if self.mode == "fixed":
+            return self.base
+
+        def perturb(value: int, cands: Sequence[int]) -> int:
+            step = cands[1] - cands[0] if len(cands) > 1 else 1
+            return self._snap(rng.gauss(value, sigma_steps * step), cands)
+
+        if self.mode == "separate":
+            return replace(
+                acc,
+                glb_bytes=perturb(acc.glb_bytes, self.glb_candidates),
+                wbuf_bytes=perturb(acc.wbuf_bytes, self.wbuf_candidates),
+            )
+        return replace(acc,
+                       glb_bytes=perturb(acc.glb_bytes, self.shared_candidates))
+
+
+# ---------------------------------------------------------------------------
+# genome
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Genome:
+    groups: List[Set[int]]
+    acc: AcceleratorConfig
+    cost: float = math.inf
+    plan: Optional[PlanCost] = None
+
+    def clone(self) -> "Genome":
+        return Genome([set(s) for s in self.groups], self.acc)
+
+
+# ---------------------------------------------------------------------------
+# operators
+# ---------------------------------------------------------------------------
+
+def crossover(g: Graph, mom: Genome, dad: Genome, hw: HWSpace,
+              rng: random.Random) -> Genome:
+    parents = (mom, dad)
+    gid_of = []
+    for p in parents:
+        d: Dict[int, int] = {}
+        for i, s in enumerate(p.groups):
+            for v in s:
+                d[v] = i
+        gid_of.append(d)
+
+    decided: Dict[int, int] = {}          # node -> child group index
+    child_groups: List[Set[int]] = []
+    for v in g.topo_order():
+        if v in decided:
+            continue
+        p = rng.randrange(2)
+        src_group = parents[p].groups[gid_of[p][v]]
+        undecided = {u for u in src_group if u not in decided}
+        overlap = {u for u in src_group if u in decided}
+        if overlap and rng.random() < 0.5:
+            # Child-2 style: merge the undecided members into one subgraph of
+            # an already-decided member
+            tgt = decided[rng.choice(sorted(overlap))]
+            child_groups[tgt] |= undecided
+            for u in undecided:
+                decided[u] = tgt
+        else:
+            # Child-1 style: split out a fresh subgraph
+            idx = len(child_groups)
+            child_groups.append(set(undecided))
+            for u in undecided:
+                decided[u] = idx
+    groups = normalize(g, child_groups)
+    return Genome(groups, hw.blend(mom.acc, dad.acc, rng))
+
+
+def mutate(g: Graph, genome: Genome, hw: HWSpace, rng: random.Random,
+           p_node: float = 0.35, p_split: float = 0.25, p_merge: float = 0.25,
+           p_dse: float = 0.15) -> Genome:
+    child = genome.clone()
+    r = rng.random()
+    groups = child.groups
+    if r < p_node and g.n > 1:
+        # modify-node: reassign a random node to a neighbour subgraph or a new one
+        v = rng.randrange(g.n)
+        src = next(i for i, s in enumerate(groups) if v in s)
+        gid = {u: i for i, s in enumerate(groups) for u in s}
+        neigh = {gid[u] for u in (g.preds(v) + g.succs(v))} - {src}
+        choices = sorted(neigh) + ["new"]
+        pick = rng.choice(choices)
+        groups[src].discard(v)
+        if pick == "new":
+            groups.append({v})
+        else:
+            groups[pick].add(v)
+        child.groups = normalize(g, [s for s in groups if s])
+    elif r < p_node + p_split:
+        multi = [i for i, s in enumerate(groups) if len(s) > 1]
+        if multi:
+            i = rng.choice(multi)
+            pieces = rng.choice([2, 2, 3])
+            rest = [s for j, s in enumerate(groups) if j != i]
+            rest.extend(split_group_topo(g, groups[i], pieces))
+            child.groups = normalize(g, rest)
+    elif r < p_node + p_split + p_merge and len(groups) > 1:
+        # merge two adjacent subgraphs (prefer connected pairs)
+        gid = {u: i for i, s in enumerate(groups) for u in s}
+        pairs = {(min(gid[e.src], gid[e.dst]), max(gid[e.src], gid[e.dst]))
+                 for e in g.edges if gid[e.src] != gid[e.dst]}
+        if pairs:
+            a, b = rng.choice(sorted(pairs))
+            groups[a] |= groups[b]
+            del groups[b]
+            child.groups = normalize(g, groups)
+    else:
+        child.acc = hw.mutate(child.acc, rng)
+    return child
+
+
+# ---------------------------------------------------------------------------
+# the Cocco GA loop
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SearchResult:
+    best: Genome
+    history: List[Tuple[int, float]]            # (samples, best cost so far)
+    population_log: List[List[Tuple[int, float, float]]]  # per-gen (bufsz, metric, cost)
+    samples: int
+    evaluations: int
+
+
+def _evaluate(g: Graph, genome: Genome, obj: Objective, ev: CachedEvaluator,
+              out_tile: int) -> None:
+    genome.groups = split_to_fit(g, genome.groups, genome.acc,
+                                 out_tile=out_tile, ev=ev)
+    plan = ev.plan(genome.groups, genome.acc)
+    genome.plan = plan
+    genome.cost = obj.cost(plan, genome.acc)
+
+
+def run_ga(
+    g: Graph,
+    objective: Objective,
+    hw: HWSpace,
+    sample_budget: int = 50_000,
+    population: int = 100,
+    tournament_k: int = 4,
+    crossover_frac: float = 0.5,
+    elite: int = 2,
+    seed: int = 0,
+    out_tile: int = 1,
+    init_groups: Optional[List[List[Set[int]]]] = None,
+    log_populations: bool = False,
+    ev: Optional[CachedEvaluator] = None,
+) -> SearchResult:
+    rng = random.Random(seed)
+    ev = ev or CachedEvaluator(g, out_tile=out_tile)
+
+    pop: List[Genome] = []
+    if init_groups:
+        for gr in init_groups[: population]:
+            pop.append(Genome([set(s) for s in gr], hw.sample(rng)))
+    while len(pop) < population:
+        mode = rng.random()
+        if mode < 0.2:
+            groups = singleton_partition(g)
+        else:
+            groups = random_partition(g, rng,
+                                      mean_size=rng.uniform(1.5, 6.0))
+        pop.append(Genome(groups, hw.sample(rng)))
+
+    samples = 0
+    history: List[Tuple[int, float]] = []
+    pop_log: List[List[Tuple[int, float, float]]] = []
+    best: Optional[Genome] = None
+
+    for ind in pop:
+        _evaluate(g, ind, objective, ev, out_tile)
+        samples += 1
+        if best is None or ind.cost < best.cost:
+            best = ind.clone()
+            best.cost, best.plan = ind.cost, ind.plan
+        history.append((samples, best.cost))
+
+    while samples < sample_budget:
+        # --- variation -------------------------------------------------
+        offspring: List[Genome] = []
+        n_children = population
+        for _ in range(n_children):
+            if rng.random() < crossover_frac and len(pop) >= 2:
+                mom, dad = rng.sample(pop, 2)
+                child = crossover(g, mom, dad, hw, rng)
+                if rng.random() < 0.5:
+                    child = mutate(g, child, hw, rng)
+            else:
+                child = mutate(g, rng.choice(pop), hw, rng)
+            offspring.append(child)
+
+        evaluated: List[Genome] = []
+        for ind in offspring:
+            _evaluate(g, ind, objective, ev, out_tile)
+            evaluated.append(ind)
+            samples += 1
+            if ind.cost < best.cost:
+                best = ind.clone()
+                best.cost, best.plan = ind.cost, ind.plan
+            history.append((samples, best.cost))
+            if samples >= sample_budget:
+                break
+
+        # --- tournament selection over parents + offspring --------------
+        pool = pop + evaluated
+        new_pop: List[Genome] = sorted(pool, key=lambda i: i.cost)[:elite]
+        while len(new_pop) < population:
+            contenders = rng.sample(pool, min(tournament_k, len(pool)))
+            new_pop.append(min(contenders, key=lambda i: i.cost))
+        pop = new_pop
+        if log_populations:
+            pop_log.append([
+                (float(i.acc.buf_size_total),
+                 float(i.plan.metric(objective.metric)) if i.plan else math.inf,
+                 i.cost)
+                for i in pop
+            ])
+
+    return SearchResult(best=best, history=history, population_log=pop_log,
+                        samples=samples, evaluations=ev.evaluations)

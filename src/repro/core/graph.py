@@ -1,0 +1,225 @@
+"""Computation-graph IR for the Cocco scheme.
+
+A DNN model is a DAG ``G = (V, E)`` (paper §4.1.1).  Every node is a layer
+producing one output tensor.  For the memory scheme we model the *sliding*
+spatial axis explicitly (rows, i.e. the H axis of an NWHC layout): a node's
+output is ``out_len`` rows of ``line_bytes`` bytes each.  Every edge carries the
+consumer's window semantics over the producer's rows:
+
+* ``sliding`` edges have a kernel extent ``F`` and stride ``s`` (convolutions,
+  pooling; pointwise ops are F=1, s=1),
+* ``full`` edges require the producer's entire output to be resident before the
+  consumer can start (attention over a sequence, global pooling, FC over the
+  spatial axis).  These act as phase boundaries in the subgraph pipeline.
+
+Units: activation/weight bytes are INT8 (1 byte/elem) as in the paper's
+Simba-like platform.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SLIDING = "sliding"
+FULL = "full"
+
+
+@dataclass(frozen=True)
+class Edge:
+    """Dependency ``src -> dst``: dst consumes src's output."""
+
+    src: int
+    dst: int
+    F: int = 1          # window extent in producer rows (sliding only)
+    s: int = 1          # stride in producer rows (sliding only)
+    kind: str = SLIDING
+
+    def window(self, k: int) -> int:
+        """Rows of src needed for dst to produce ``k`` of its own rows.
+
+        This is the paper's ``f_v(x) = F + (x - 1) * s`` (footnote 1).
+        """
+        if self.kind == FULL:
+            raise ValueError("full edges have no finite window")
+        return self.F + (k - 1) * self.s
+
+
+@dataclass
+class Node:
+    """One layer.  ``out_len`` rows x ``line_bytes`` bytes/row output tensor."""
+
+    idx: int
+    name: str
+    out_len: int                 # rows along the sliding axis (H_out)
+    line_bytes: int              # W_out * C_out * act_bytes
+    weight_bytes: int = 0
+    macs: int = 0
+    is_output: bool = False      # model output -> always written back to DRAM
+
+    @property
+    def out_bytes(self) -> int:
+        return self.out_len * self.line_bytes
+
+
+class Graph:
+    """A DAG of layers.  Node indices are dense 0..N-1 in insertion order and
+    insertion order must be a valid topological order (asserted)."""
+
+    def __init__(self, name: str = "graph") -> None:
+        self.name = name
+        self.nodes: List[Node] = []
+        self.edges: List[Edge] = []
+        self._out: Dict[int, List[Edge]] = {}
+        self._in: Dict[int, List[Edge]] = {}
+
+    # -- construction -----------------------------------------------------
+    def add_node(
+        self,
+        name: str,
+        out_len: int,
+        line_bytes: int,
+        weight_bytes: int = 0,
+        macs: int = 0,
+        is_output: bool = False,
+    ) -> int:
+        idx = len(self.nodes)
+        self.nodes.append(
+            Node(idx, name, int(out_len), int(line_bytes), int(weight_bytes),
+                 int(macs), is_output)
+        )
+        self._out[idx] = []
+        self._in[idx] = []
+        return idx
+
+    def add_edge(self, src: int, dst: int, F: int = 1, s: int = 1,
+                 kind: str = SLIDING) -> None:
+        if not (0 <= src < len(self.nodes) and 0 <= dst < len(self.nodes)):
+            raise ValueError(f"bad edge ({src},{dst})")
+        if src >= dst:
+            raise ValueError("insertion order must be topological: src < dst")
+        if kind == SLIDING:
+            if F < 1 or s < 1:
+                raise ValueError("sliding edge needs F>=1, s>=1")
+        e = Edge(src, dst, int(F), int(s), kind)
+        self.edges.append(e)
+        self._out[src].append(e)
+        self._in[dst].append(e)
+
+    # -- queries ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n(self) -> int:
+        return len(self.nodes)
+
+    def in_edges(self, v: int) -> List[Edge]:
+        return self._in[v]
+
+    def out_edges(self, v: int) -> List[Edge]:
+        return self._out[v]
+
+    def preds(self, v: int) -> List[int]:
+        return [e.src for e in self._in[v]]
+
+    def succs(self, v: int) -> List[int]:
+        return [e.dst for e in self._out[v]]
+
+    def sources(self) -> List[int]:
+        return [v.idx for v in self.nodes if not self._in[v.idx]]
+
+    def sinks(self) -> List[int]:
+        return [v.idx for v in self.nodes if not self._out[v.idx]]
+
+    def topo_order(self) -> List[int]:
+        return list(range(self.n))  # insertion order is topological
+
+    # -- subgraph helpers ---------------------------------------------------
+    def internal_edges(self, nodes: Set[int]) -> List[Edge]:
+        return [e for e in self.edges if e.src in nodes and e.dst in nodes]
+
+    def boundary_in(self, nodes: Set[int]) -> List[Edge]:
+        """Edges entering ``nodes`` from outside."""
+        return [e for e in self.edges if e.dst in nodes and e.src not in nodes]
+
+    def boundary_out(self, nodes: Set[int]) -> List[Edge]:
+        """Edges leaving ``nodes``."""
+        return [e for e in self.edges if e.src in nodes and e.dst not in nodes]
+
+    def is_connected(self, nodes: Set[int]) -> bool:
+        """Weak connectivity of the induced subgraph (paper: subgraphs must be
+        connected in G, otherwise meaningless)."""
+        if not nodes:
+            return False
+        if len(nodes) == 1:
+            return True
+        adj: Dict[int, List[int]] = {v: [] for v in nodes}
+        for e in self.internal_edges(nodes):
+            adj[e.src].append(e.dst)
+            adj[e.dst].append(e.src)
+        seen = set()
+        stack = [next(iter(nodes))]
+        while stack:
+            v = stack.pop()
+            if v in seen:
+                continue
+            seen.add(v)
+            stack.extend(w for w in adj[v] if w not in seen)
+        return len(seen) == len(nodes)
+
+    def weakly_connected_components(self, nodes: Set[int]) -> List[Set[int]]:
+        remaining = set(nodes)
+        comps: List[Set[int]] = []
+        adj: Dict[int, List[int]] = {v: [] for v in nodes}
+        for e in self.internal_edges(nodes):
+            adj[e.src].append(e.dst)
+            adj[e.dst].append(e.src)
+        while remaining:
+            root = next(iter(remaining))
+            comp = set()
+            stack = [root]
+            while stack:
+                v = stack.pop()
+                if v in comp:
+                    continue
+                comp.add(v)
+                stack.extend(w for w in adj[v] if w not in comp)
+            comps.append(comp)
+            remaining -= comp
+        return comps
+
+    # -- totals -------------------------------------------------------------
+    def total_weight_bytes(self) -> int:
+        return sum(v.weight_bytes for v in self.nodes)
+
+    def total_macs(self) -> int:
+        return sum(v.macs for v in self.nodes)
+
+    def total_act_bytes(self) -> int:
+        return sum(v.out_bytes for v in self.nodes)
+
+    def summary(self) -> str:
+        return (
+            f"{self.name}: {self.n} nodes, {len(self.edges)} edges, "
+            f"{self.total_macs()/1e6:.1f} MMACs, "
+            f"{self.total_weight_bytes()/1e6:.2f} MB weights, "
+            f"{self.total_act_bytes()/1e6:.2f} MB activations"
+        )
+
+
+def sequential_graph(
+    layers: Sequence[Tuple[str, int, int, int, int, int, int]],
+    name: str = "chain",
+) -> Graph:
+    """Build a plain chain. layers = [(name, out_len, line_bytes, wbytes, macs, F, s)].
+    F, s describe the window each layer applies to its predecessor."""
+    g = Graph(name)
+    prev: Optional[int] = None
+    for i, (lname, out_len, line_bytes, wb, macs, F, s) in enumerate(layers):
+        idx = g.add_node(lname, out_len, line_bytes, wb, macs,
+                         is_output=(i == len(layers) - 1))
+        if prev is not None:
+            g.add_edge(prev, idx, F=F, s=s)
+        prev = idx
+    return g

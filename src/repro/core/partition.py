@@ -1,0 +1,200 @@
+"""Graph-level partition schemes (paper §4.1.1).
+
+A partition ``P : V -> N`` assigns each layer to a subgraph; validity requires
+``P(u) <= P(v)`` for every edge (computed before use) and every subgraph to be
+weakly connected.  Subgraphs execute in id order.
+
+``normalize`` repairs an arbitrary grouping into a valid scheme (used after GA
+crossover/mutations): split disconnected groups, break quotient-graph cycles by
+topological bisection, then renumber groups in quotient-topological order.
+``split_to_fit`` is the paper's in-situ tuning (§4.4.4): oversized subgraphs
+are split during evaluation instead of discarding the genome.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .cost import AcceleratorConfig, PlanCost, evaluate_partition, evaluate_subgraph
+from .graph import Graph
+
+
+Partition = List[int]  # P[node] = subgraph id
+
+
+def groups_of(P: Sequence[int]) -> List[Set[int]]:
+    """Group node sets ordered by subgraph id."""
+    byid: Dict[int, Set[int]] = {}
+    for v, pid in enumerate(P):
+        byid.setdefault(pid, set()).add(v)
+    return [byid[k] for k in sorted(byid)]
+
+
+def partition_of(groups: Sequence[Set[int]], n: int) -> Partition:
+    P = [0] * n
+    for i, s in enumerate(groups):
+        for v in s:
+            P[v] = i
+    return P
+
+
+def is_valid(g: Graph, P: Sequence[int]) -> bool:
+    for e in g.edges:
+        if P[e.src] > P[e.dst]:
+            return False
+    for s in groups_of(P):
+        if not g.is_connected(s):
+            return False
+    return True
+
+
+def _quotient_edges(g: Graph, gid: Dict[int, int]) -> Set[Tuple[int, int]]:
+    q = set()
+    for e in g.edges:
+        a, b = gid[e.src], gid[e.dst]
+        if a != b:
+            q.add((a, b))
+    return q
+
+
+def _topo_order_quotient(n_groups: int,
+                         qedges: Set[Tuple[int, int]]) -> Optional[List[int]]:
+    """Kahn; None if cyclic."""
+    indeg = [0] * n_groups
+    out: Dict[int, List[int]] = {i: [] for i in range(n_groups)}
+    for a, b in qedges:
+        out[a].append(b)
+        indeg[b] += 1
+    stack = [i for i in range(n_groups) if indeg[i] == 0]
+    order = []
+    while stack:
+        # deterministic: smallest id first
+        stack.sort(reverse=True)
+        v = stack.pop()
+        order.append(v)
+        for w in out[v]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                stack.append(w)
+    return order if len(order) == n_groups else None
+
+
+def normalize(g: Graph, raw_groups: Sequence[Set[int]]) -> List[Set[int]]:
+    """Repair arbitrary groups into a valid ordered partition."""
+    # 1. split disconnected groups into weak components
+    groups: List[Set[int]] = []
+    for s in raw_groups:
+        if not s:
+            continue
+        groups.extend(g.weakly_connected_components(set(s)))
+
+    # 2. break quotient cycles by topological bisection of offending groups
+    for _ in range(g.n + 1):
+        gid = {}
+        for i, s in enumerate(groups):
+            for v in s:
+                gid[v] = i
+        qedges = _quotient_edges(g, gid)
+        order = _topo_order_quotient(len(groups), qedges)
+        if order is not None:
+            # renumber groups in quotient topological order
+            return [groups[i] for i in order]
+        # find a group on a cycle: any group with both in- and out-quotient
+        # edges to a common strongly-connected region; heuristic: split the
+        # largest multi-node group by node-index median
+        cand = max((s for s in groups if len(s) > 1), key=len, default=None)
+        if cand is None:
+            raise RuntimeError("cyclic quotient with singleton groups")
+        med = sorted(cand)[len(cand) // 2]
+        lo = {v for v in cand if v < med}
+        hi = {v for v in cand if v >= med}
+        groups.remove(cand)
+        for part in (lo, hi):
+            groups.extend(g.weakly_connected_components(part)) if part else None
+    raise RuntimeError("normalize did not converge")
+
+
+def split_group_topo(g: Graph, s: Set[int], pieces: int = 2) -> List[Set[int]]:
+    """Split a group into ~equal topological slices (each then re-split into
+    weak components)."""
+    order = sorted(s)
+    k = max(1, len(order) // pieces)
+    out: List[Set[int]] = []
+    for i in range(0, len(order), k):
+        chunk = set(order[i: i + k])
+        out.extend(g.weakly_connected_components(chunk))
+    return out
+
+
+def split_to_fit(
+    g: Graph,
+    groups: List[Set[int]],
+    acc: AcceleratorConfig,
+    out_tile: int = 1,
+    max_rounds: int = 64,
+    ev: Optional["CachedEvaluator"] = None,
+) -> List[Set[int]]:
+    """In-situ tuning (paper §4.4.4): bisect any infeasible subgraph until all
+    fit the buffers (singletons stream, always feasible)."""
+    from .cost import CachedEvaluator  # local import to avoid cycle at module load
+
+    ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    for _ in range(max_rounds):
+        changed = False
+        new: List[Set[int]] = []
+        for s in groups:
+            if len(s) == 1:
+                new.append(s)
+                continue
+            c = ev.subgraph(s, acc)
+            if c.feasible:
+                new.append(s)
+            else:
+                new.extend(split_group_topo(g, s, pieces=2))
+                changed = True
+        groups = new
+        if not changed:
+            return normalize(g, groups)
+    return normalize(g, [{v} for s in groups for v in s])
+
+
+def singleton_partition(g: Graph) -> List[Set[int]]:
+    return [{v} for v in range(g.n)]
+
+
+def random_partition(g: Graph, rng: random.Random,
+                     mean_size: float = 3.0) -> List[Set[int]]:
+    """Random valid partition: walk nodes in topological order; each node joins
+    a random open predecessor group or starts a new one (paper §4.4.1)."""
+    gid: Dict[int, int] = {}
+    groups: List[Set[int]] = []
+    p_join = 1.0 - 1.0 / max(mean_size, 1.0)
+    for v in g.topo_order():
+        cands = {gid[u] for u in g.preds(v) if u in gid}
+        if cands and rng.random() < p_join:
+            c = rng.choice(sorted(cands))
+            groups[c].add(v)
+            gid[v] = c
+        else:
+            gid[v] = len(groups)
+            groups.append({v})
+    return normalize(g, groups)
+
+
+def evaluate_groups(
+    g: Graph,
+    groups: List[Set[int]],
+    acc: AcceleratorConfig,
+    out_tile: int = 1,
+    repair: bool = True,
+    ev: Optional["CachedEvaluator"] = None,
+) -> Tuple[List[Set[int]], PlanCost]:
+    """Evaluate (optionally repairing in-situ); returns (repaired groups, cost)."""
+    from .cost import CachedEvaluator
+
+    ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    if repair:
+        groups = split_to_fit(g, groups, acc, out_tile=out_tile, ev=ev)
+    plan = ev.plan(groups, acc)
+    return groups, plan

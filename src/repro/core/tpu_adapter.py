@@ -1,0 +1,194 @@
+"""Cocco-on-TPU: the paper's co-exploration as the framework's execution
+planner (DESIGN.md §3).
+
+The TPU memory hierarchy maps onto the paper's model as
+    HBM  <-> external memory (DRAM),   VMEM <-> global buffer,
+and a transformer block's op-DAG maps onto a Cocco computation graph whose
+rows are tokens: pointwise ops (norms, projections, gates) are F=1,s=1
+edges; attention over the sequence is a FULL edge (the S x S score tensor is
+the production-centric strawman).  Running the paper's co-exploration over
+this graph chooses (a) which ops fuse into VMEM-resident regions — the
+fusion groups we implement as Pallas kernels / XLA fusions — and (b) the
+VMEM working-set budget per group, which sizes the kernels' BlockSpecs.
+
+``plan_architecture`` returns an ExecutionPlan consumed by the launcher
+(block sizes, fusion groups, HBM-traffic estimate) and reported in
+EXPERIMENTS.md §Perf as the paper-faithful planning step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.models.config import FFN_MOE, FFN_MOE_RESIDUAL, ModelConfig
+
+from .cocco import CoccoResult, co_explore
+from .cost import MB, AcceleratorConfig
+from .graph import FULL, Graph
+
+# TPU v5e-class accelerator constants for the Cocco cost model
+VMEM_BYTES = 96 * MB            # usable VMEM working set
+TPU_ACC = AcceleratorConfig(
+    glb_bytes=VMEM_BYTES,
+    wbuf_bytes=0,
+    shared=True,
+    macs_per_cycle=104_000,      # ~197 TFLOP/s bf16 @ 0.94 GHz
+    freq_hz=0.94e9,
+    dram_bytes_per_sec=819e9,    # HBM
+    e_dram_pj_per_byte=3.0,      # HBM access energy (~0.4 pJ/bit)
+    e_mac_pj=0.15,               # bf16 MAC
+)
+
+VMEM_CANDIDATES = tuple(m * MB for m in (16, 32, 48, 64, 96, 128))
+
+
+def build_block_graph(cfg: ModelConfig, layer_idx: int, tokens: int,
+                      tp_degree: int = 16) -> Graph:
+    """One transformer block as a Cocco graph.  Rows = tokens; line bytes =
+    per-token tensor width (bf16, TP-sharded).  Weights are the per-device
+    TP shards."""
+    spec = cfg.block_specs()[layer_idx]
+    d = cfg.d_model
+    bf = 2
+    g = Graph(f"{cfg.name}.L{layer_idx}.{spec.code}")
+
+    def line(width):  # per-token bytes after TP sharding of the width dim
+        return max(1, int(width * bf))
+
+    x = g.add_node("x", tokens, line(d))
+    n1 = g.add_node("norm1", tokens, line(d), weight_bytes=d * bf,
+                    macs=4 * d)
+    g.add_edge(x, n1)
+
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    dh, dv = cfg.head_dim, cfg.v_dim
+    if spec.mixer in ("attn", "attn_local", "attn_mla"):
+        qkv_w = (d * (h * dh + 2 * kh * dh)) // tp_degree * bf
+        qkv = g.add_node("qkv", tokens, line((h * dh + 2 * kh * dh)
+                                             // tp_degree),
+                         weight_bytes=qkv_w,
+                         macs=tokens and 2 * d * (h * dh + 2 * kh * dh)
+                         // tp_degree)
+        g.add_edge(n1, qkv)
+        attn = g.add_node("attn", tokens, line(h * dv // tp_degree),
+                          macs=4 * tokens * (h // tp_degree) * dh // 2)
+        g.add_edge(qkv, attn, kind=FULL)   # sequence-global dependency
+        proj = g.add_node("attn_proj", tokens, line(d),
+                          weight_bytes=h * dv * d // tp_degree * bf,
+                          macs=2 * h * dv * d // tp_degree)
+        g.add_edge(attn, proj)
+        mix_out = g.add_node("add1", tokens, line(d), macs=d)
+        g.add_edge(proj, mix_out)
+        g.add_edge(x, mix_out)
+    else:  # ssm/recurrent mixers: token-local once state is carried
+        di = cfg.mamba_expand * d if spec.mixer == "mamba" else 2 * d
+        inp = g.add_node("ssm_in", tokens, line(2 * di // tp_degree),
+                         weight_bytes=d * 2 * di // tp_degree * bf,
+                         macs=2 * d * 2 * di // tp_degree)
+        g.add_edge(n1, inp)
+        conv = g.add_node("ssm_conv", tokens, line(di // tp_degree),
+                          weight_bytes=4 * di // tp_degree * bf,
+                          macs=8 * di // tp_degree, )
+        g.add_edge(inp, conv, F=4, s=1)
+        scan = g.add_node("ssm_scan", tokens, line(di // tp_degree),
+                          macs=10 * di * cfg.mamba_d_state // tp_degree)
+        g.add_edge(conv, scan, F=1, s=1)
+        outp = g.add_node("ssm_out", tokens, line(d),
+                          weight_bytes=di * d // tp_degree * bf,
+                          macs=2 * di * d // tp_degree)
+        g.add_edge(scan, outp)
+        mix_out = g.add_node("add1", tokens, line(d), macs=d)
+        g.add_edge(outp, mix_out)
+        g.add_edge(x, mix_out)
+
+    if spec.ffn == "none":
+        g.nodes[mix_out].is_output = True
+        return g
+
+    n2 = g.add_node("norm2", tokens, line(d), weight_bytes=d * bf, macs=4 * d)
+    g.add_edge(mix_out, n2)
+    dff = (cfg.d_ff_expert if spec.ffn in (FFN_MOE, FFN_MOE_RESIDUAL)
+           else cfg.d_ff)
+    dff_eff = dff * (cfg.top_k if spec.ffn in (FFN_MOE, FFN_MOE_RESIDUAL)
+                     else 1)
+    up = g.add_node("ffn_up_gate", tokens, line(2 * dff_eff // tp_degree),
+                    weight_bytes=2 * d * dff_eff // tp_degree * bf,
+                    macs=4 * d * dff_eff // tp_degree)
+    g.add_edge(n2, up)
+    gate = g.add_node("ffn_act", tokens, line(dff_eff // tp_degree),
+                      macs=8 * dff_eff // tp_degree)
+    g.add_edge(up, gate)
+    down = g.add_node("ffn_down", tokens, line(d),
+                      weight_bytes=dff_eff * d // tp_degree * bf,
+                      macs=2 * dff_eff * d // tp_degree)
+    g.add_edge(gate, down)
+    out = g.add_node("add2", tokens, line(d), macs=d, is_output=True)
+    g.add_edge(down, out)
+    g.add_edge(mix_out, out)
+    return g
+
+
+@dataclass
+class ExecutionPlan:
+    arch: str
+    layer_idx: int
+    vmem_budget: int
+    fusion_groups: List[List[str]]
+    hbm_bytes: int
+    hbm_bytes_unfused: int
+    block_m: int                    # suggested kernel row-block size
+    result: Optional[CoccoResult] = None
+
+    @property
+    def traffic_saving(self) -> float:
+        if self.hbm_bytes_unfused <= 0:
+            return 0.0
+        return 1.0 - self.hbm_bytes / self.hbm_bytes_unfused
+
+    def summary(self) -> str:
+        groups = " | ".join("+".join(gr) for gr in self.fusion_groups)
+        return (f"{self.arch} L{self.layer_idx}: VMEM {self.vmem_budget//MB}MB, "
+                f"HBM traffic -{self.traffic_saving*100:.0f}% vs unfused, "
+                f"block_m={self.block_m}, groups: {groups}")
+
+
+def plan_architecture(cfg: ModelConfig, tokens_local: int = 8192,
+                      layer_idx: Optional[int] = None,
+                      sample_budget: int = 3_000,
+                      seed: int = 0) -> ExecutionPlan:
+    """Run the paper's co-exploration over one block of the arch and derive
+    the execution plan (fusion groups + VMEM budget + block size)."""
+    if layer_idx is None:
+        pre, p, reps, rem = cfg.layout()
+        layer_idx = pre  # first scanned layer: the repeating workhorse
+    g = build_block_graph(cfg, layer_idx, tokens_local)
+    out_tile = max(128, tokens_local // 64)
+    # VMEM is fixed hardware on TPU: partition under the fixed budget
+    # (Formula 1); the *claimed working set* of the winning plan is the
+    # memory-configuration output (it sizes the kernels' BlockSpecs).
+    from .cocco import partition_only
+    from .cost import CachedEvaluator
+    from .memory import subgraph_footprint
+
+    ev = CachedEvaluator(g, out_tile=out_tile)
+    res = partition_only(g, TPU_ACC, metric="ema",
+                         sample_budget=sample_budget, population=48,
+                         seed=seed, out_tile=out_tile, ev=ev)
+    unfused = ev.plan([{v} for v in range(g.n)], TPU_ACC)
+    groups = [[g.nodes[v].name for v in sorted(s)] for s in res.groups
+              if len(s) > 0]
+    claimed = max((subgraph_footprint(g, s, out_tile=out_tile).total_bytes
+                   for s in res.groups), default=1)
+    vmem = min((c for c in VMEM_CANDIDATES if c >= claimed),
+               default=VMEM_CANDIDATES[-1])
+    # block_m: rows of the widest fused group that fit half the VMEM budget
+    widest = max((sum(g.nodes[v].line_bytes for v in s) for s in res.groups),
+                 default=1)
+    block_m = max(128, min(tokens_local, (vmem // 2) // max(widest, 1)))
+    block_m = 1 << (block_m.bit_length() - 1)  # round down to pow2
+    return ExecutionPlan(
+        arch=cfg.name, layer_idx=layer_idx, vmem_budget=vmem,
+        fusion_groups=groups, hbm_bytes=res.plan.ema_total,
+        hbm_bytes_unfused=unfused.ema_total, block_m=block_m, result=res,
+    )

@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, PrefetchingLoader, SyntheticLM
+
+__all__ = ["DataConfig", "PrefetchingLoader", "SyntheticLM"]

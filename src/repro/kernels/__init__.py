@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical sub-DAGs (DESIGN.md §6):
+flash attention, fused SwiGLU FFN, fused RMSNorm — each with a pure-jnp
+oracle in ref.py and interpret-mode validation in tests/test_kernels.py."""
+
+from .flash_attention import flash_attention
+from .fused_ffn import fused_swiglu
+from .ops import attention, rmsnorm, swiglu
+from .rmsnorm import fused_rmsnorm
+
+__all__ = ["attention", "flash_attention", "fused_rmsnorm", "fused_swiglu",
+           "rmsnorm", "swiglu"]

@@ -1,0 +1,129 @@
+"""Flash attention for TPU (pl.pallas_call + BlockSpec VMEM tiling).
+
+This kernel *is* the paper's consumption-centric scheme specialized to
+attention: the output tile (block_q rows) drives backward derivation of the
+K/V tiles it consumes; the S x S score matrix — the production-centric
+strawman — never exists in HBM.  The MAIN region is the (acc, m, l) VMEM
+scratch; K/V blocks stream through like the paper's input-node regions.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost and sequential
+("arbitrary") so the online-softmax carry lives in VMEM scratch across kv
+steps.  Causal/windowed masking is applied in-block; dead blocks (entirely
+above the diagonal or outside the window) skip their compute via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, nk: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level liveness: skip blocks fully above the causal diagonal or
+    # fully left of the sliding window
+    live = jnp.bool_(True)
+    if causal:
+        live = (kb * block_k) <= (qb * block_q + block_q - 1)
+    if window:
+        live = jnp.logical_and(
+            live, (kb * block_k + block_k - 1) > (qb * block_q - window))
+
+    @pl.when(live)
+    def _step():
+        q_pos = qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        v = v_ref[0].astype(jnp.float32)                  # [bk, d]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    causal: bool = True, window: int = 0,
+    block_q: int = 128, block_k: int = 128,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """q,k,v: [B, H, S, d] -> [B, H, S, d]."""
+    B, H, S, d = q.shape
+    assert k.shape == (B, H, S, d) and v.shape == (B, H, S, d)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    scale = scale or 1.0 / math.sqrt(d)
+    nq, nk = S // block_q, S // block_k
+
+    qf = q.reshape(B * H, S, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc  (MAIN region)
+            pltpu.VMEM((block_q,), jnp.float32),     # running max m
+            pltpu.VMEM((block_q,), jnp.float32),     # running denom l
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, d)

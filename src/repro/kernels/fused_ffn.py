@@ -1,0 +1,81 @@
+"""Fused SwiGLU FFN kernel: the paper's subgraph-in-buffer idea on the FFN
+sub-DAG.  The [rows, d_ff] hidden activation (up to 2x d_ff floats/token —
+the dominant intermediate of an LLM block) never leaves VMEM: each grid step
+computes an [block_m, block_f] tile of silu(x@Wg) * (x@Wi) in scratch and
+immediately folds it into the output accumulator via Wo.
+
+Grid: (m_blocks, f_blocks) with f innermost sequential; the accumulator is
+the MAIN region, weight tiles stream like the paper's input regions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ffn_kernel(x_ref, wg_ref, wi_ref, wo_ref, o_ref, acc_ref, *, nf: int):
+    fb = pl.program_id(1)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # [bm, d]
+    wg = wg_ref[...].astype(jnp.float32)                  # [d, bf]
+    wi = wi_ref[...].astype(jnp.float32)
+    g = jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wi, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * u                                # [bm, bf] stays in VMEM
+    wo = wo_ref[...].astype(jnp.float32)                  # [bf, d]
+    acc_ref[...] += jax.lax.dot_general(h, wo, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(fb == nf - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def fused_swiglu(
+    x: jnp.ndarray,                  # [M, d]
+    wg: jnp.ndarray,                 # [d, f]
+    wi: jnp.ndarray,                 # [d, f]
+    wo: jnp.ndarray,                 # [f, d]
+    block_m: int = 256,
+    block_f: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    M, d = x.shape
+    f = wg.shape[1]
+    assert wg.shape == (d, f) and wi.shape == (d, f) and wo.shape == (f, d)
+    block_m = min(block_m, M)
+    block_f = min(block_f, f)
+    assert M % block_m == 0 and f % block_f == 0, (M, f, block_m, block_f)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nm, nf = M // block_m, f // block_f
+
+    kernel = functools.partial(_ffn_kernel, nf=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nf),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((d, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wg, wi, wo)

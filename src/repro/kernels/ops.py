@@ -1,0 +1,41 @@
+"""Jit'd public wrappers around the Pallas kernels with ref fallbacks."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .fused_ffn import fused_swiglu
+from .rmsnorm import fused_rmsnorm
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "use_kernel"))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128,
+              use_kernel: bool = True):
+    if not use_kernel:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_f", "use_kernel"))
+def swiglu(x, wg, wi, wo, block_m: int = 256, block_f: int = 512,
+           use_kernel: bool = True):
+    if not use_kernel:
+        return ref.swiglu_ref(x, wg, wi, wo)
+    return fused_swiglu(x, wg, wi, wo, block_m=block_m, block_f=block_f)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_m", "use_kernel"))
+def rmsnorm(x, scale, eps: float = 1e-5, block_m: int = 256,
+            use_kernel: bool = True):
+    if not use_kernel:
+        return ref.rmsnorm_ref(x, scale, eps)
+    return fused_rmsnorm(x, scale, eps=eps, block_m=block_m)

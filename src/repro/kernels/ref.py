@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None):
+    """q,k,v: [B, H, S, d] -> [B, H, S, d] (fp32 math)."""
+    *_, S, d = q.shape
+    scale = scale or 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(
+        q.dtype)
+
+
+def swiglu_ref(x, wg, wi, wo):
+    """x: [M, d]; wg,wi: [d, f]; wo: [f, d] (fp32 accumulation)."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(xf @ wg.astype(jnp.float32)) * (xf @ wi.astype(jnp.float32))
+    return (h @ wo.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    """x: [M, d]; scale: [d]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype)

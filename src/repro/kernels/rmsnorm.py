@@ -1,0 +1,43 @@
+"""Fused RMSNorm kernel: one pass over each row block, fp32 statistics."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # [bm, d]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def fused_rmsnorm(
+    x: jnp.ndarray,                  # [M, d]
+    scale: jnp.ndarray,              # [d]
+    eps: float = 1e-5,
+    block_m: int = 256,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    M, d = x.shape
+    block_m = min(block_m, M)
+    assert M % block_m == 0
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_rms_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

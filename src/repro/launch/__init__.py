@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, training, serving.
+
+NOTE: repro.launch.dryrun must be imported/run as the FIRST thing in a fresh
+process (it sets XLA_FLAGS before any jax initialization).
+"""
+
+from .mesh import MODEL_AXIS, make_production_mesh, rules_for
+
+__all__ = ["MODEL_AXIS", "make_production_mesh", "rules_for"]

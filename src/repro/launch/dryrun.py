@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (arch x input shape x mesh) cell: build abstract parameters
+(jax.eval_shape — no allocation), attach NamedShardings from the logical-axis
+rules, lower + compile the real step function (train_step / prefill_step /
+serve_step), print memory_analysis() (proves it fits) and cost_analysis()
+(feeds §Roofline), and emit a JSON report.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out runs/dryrun
+
+The XLA_FLAGS line above must precede every other import (jax locks the
+device count on first backend init).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs import ARCHS, SHAPES, get_config, skip_reason
+from repro.configs.shapes import ShapeSpec
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models import (
+    cache_axes,
+    encdec_apply,
+    init_caches,
+    is_param,
+    lm_apply,
+    lm_init,
+    lm_loss,
+    param_values,
+)
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import logical_sharding, mesh_context
+from repro.train import AdamWConfig, adamw_init
+from repro.train.trainstep import make_train_step
+
+ENC_FRAMES = 1_500  # whisper encoder is architecturally capped at 1500 frames
+
+
+# ---------------------------------------------------------------------------
+# abstract trees + shardings
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    """Param tree of ShapeDtypeStructs (axes ride along as pytree aux)."""
+    return jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+
+
+def param_shardings(ptree, mesh):
+    return jax.tree.map(lambda p: logical_sharding(p.axes, mesh),
+                        ptree, is_leaf=is_param)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def axes_shardings(axes_tree, mesh):
+    return jax.tree.map(lambda ax: logical_sharding(ax, mesh), axes_tree,
+                        is_leaf=_is_axes)
+
+
+# ---------------------------------------------------------------------------
+# per-cell step functions + input specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(batch SDS tree, batch sharding tree) for a train/prefill cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+
+    def add(name, shp, dtype, axes):
+        batch[name] = sds(shp, dtype)
+        shards[name] = logical_sharding(axes, mesh)
+
+    if cfg.is_encdec:
+        add("frames", (B, ENC_FRAMES, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+        add("tokens", (B, S), i32, ("batch", None))
+        if shape.kind == "train":
+            add("loss_mask", (B, S), jnp.float32, ("batch", None))
+    elif cfg.frontend == "vision_patches":
+        nf = cfg.n_frontend_tokens
+        add("extra_embeds", (B, nf, cfg.d_model), jnp.float32,
+            ("batch", None, None))
+        add("tokens", (B, max(S - nf, 1)), i32, ("batch", None))
+        if shape.kind == "train":
+            add("loss_mask", (B, max(S - nf, 1)), jnp.float32, ("batch", None))
+    else:
+        add("tokens", (B, S), i32, ("batch", None))
+        if shape.kind == "train":
+            add("loss_mask", (B, S), jnp.float32, ("batch", None))
+    return batch, shards
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        B = batch["tokens"].shape[0]
+        caches = init_caches(cfg, B, max_len, jnp.bfloat16)
+        if cfg.is_encdec:
+            logits, caches, enc_out, _ = encdec_apply(
+                params, cfg, batch["frames"], batch["tokens"], caches=caches)
+            return logits[:, -1, :], caches, enc_out
+        logits, caches, _ = lm_apply(
+            params, cfg, batch["tokens"],
+            extra_embeds=batch.get("extra_embeds"), caches=caches)
+        return logits[:, -1, :], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    if cfg.is_encdec:
+        def serve_step(params, caches, tokens, positions, enc_out):
+            logits, caches, _, _ = encdec_apply(
+                params, cfg, None, tokens, positions=positions,
+                caches=caches, enc_out=enc_out)
+            return logits[:, -1, :], caches
+        return serve_step
+
+    def serve_step(params, caches, tokens, positions):
+        logits, caches, _ = lm_apply(params, cfg, tokens,
+                                     positions=positions, caches=caches)
+        return logits[:, -1, :], caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+# ---------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                         multi_pod: bool) -> int:
+    """Baseline grad-accumulation: keep per-device microbatch ~8 sequences
+    (4 for the 4k shapes of >30B models) so activations fit 16 GB HBM."""
+    if shape.kind != "train":
+        return 1
+    data_ways = 32 if multi_pod else 16
+    per_dev = max(1, shape.global_batch // data_ways)
+    target = 4 if cfg.param_count() > 30e9 else 8
+    return max(1, per_dev // target)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_overrides: Optional[Dict] = None,
+               microbatches: Optional[int] = None,
+               cfg_overrides: Optional[Dict] = None,
+               verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    if microbatches is None:
+        microbatches = default_microbatches(cfg, shape, multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    kind = shape.kind
+    rkind = "decode_long" if (kind == "decode"
+                              and shape.global_batch == 1) else kind
+    rules = rules_for(cfg, rkind, rules_overrides)
+    t0 = time.time()
+
+    with mesh_context(mesh, rules):
+        ptree = abstract_params(cfg)
+        values = param_values(ptree)
+        psh = param_shardings(ptree, mesh)
+
+        if kind == "train":
+            opt_cfg = AdamWConfig(state_dtype=cfg.opt_dtype)
+            opt_sds = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), values)
+            opt_sh = type(opt_sds)(
+                step=NamedSharding(mesh, PS()),
+                mu=param_shardings(ptree, mesh),
+                nu=param_shardings(ptree, mesh))
+            batch, bsh = batch_specs(cfg, shape, mesh)
+            fn = make_train_step(cfg, opt_cfg, microbatches=microbatches)
+            jitted = jax.jit(fn, in_shardings=(psh, opt_sh, bsh),
+                             out_shardings=(psh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(values, opt_sds, batch)
+        elif kind == "prefill":
+            batch, bsh = batch_specs(cfg, shape, mesh)
+            fn = make_prefill_step(cfg, max_len=shape.seq_len)
+            jitted = jax.jit(fn, in_shardings=(psh, bsh))
+            lowered = jitted.lower(values, batch)
+        else:  # decode
+            B, S = shape.global_batch, shape.seq_len
+            caches_sds = jax.eval_shape(
+                lambda: init_caches(cfg, B, S, jnp.bfloat16))
+            csh = axes_shardings(cache_axes(cfg), mesh)
+            tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            tsh = logical_sharding(("batch", None), mesh)
+            fn = make_serve_step(cfg)
+            if cfg.is_encdec:
+                enc = jax.ShapeDtypeStruct((B, ENC_FRAMES, cfg.d_model),
+                                           jnp.bfloat16)
+                esh = logical_sharding(("batch", None, None), mesh)
+                jitted = jax.jit(fn, in_shardings=(psh, csh, tsh, tsh, esh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(values, caches_sds, tok, pos, enc)
+            else:
+                jitted = jax.jit(fn, in_shardings=(psh, csh, tsh, tsh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(values, caches_sds, tok, pos)
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"[{arch} | {shape_name} | {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0] if ca else {}
+        keys = ["flops", "bytes accessed", "utilization"]
+        print("  cost_analysis:", {k: v for k, v in (ca or {}).items()
+                                   if any(s in k for s in keys)})
+
+    mf = roofline.model_flops_for(cfg, kind, shape.seq_len,
+                                  shape.global_batch)
+    # scan trip-count correction (XLA counts while bodies once; DESIGN.md §8)
+    xf, xb = roofline.scan_correction(cfg, kind, shape.seq_len,
+                                      shape.global_batch, mesh.devices.size)
+    pre, p, reps, rem = cfg.layout()
+    # collectives inside scan bodies execute trip-count times: counted via
+    # trip-aware HLO parsing (roofline.collective_bytes_tripaware)
+    coll_mult = "tripaware"
+    rep = roofline.analyze(arch, shape_name, mesh_name,
+                           mesh.devices.size, compiled, mf,
+                           extra_flops=xf, extra_bytes=xb,
+                           coll_multiplier=coll_mult)
+    row = rep.row()
+    row.update({
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "kind": kind,
+        "rules": {k: str(v) for k, v in rules.items()},
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "microbatches": microbatches,
+        "scan_correction_flops": xf,
+        "scan_correction_bytes": xb,
+        "coll_multiplier": coll_mult,
+        "layout": [pre, p, reps, rem],
+    })
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                row[attr] = int(v)
+    return row
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell")
+    ap.add_argument("--out", default=None, help="directory for JSON reports")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="grad-accumulation steps (default: per-cell heuristic)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = f"{arch}__{shape}__{mesh_name}"
+        dest = os.path.join(args.out, f"{tag}.json") if args.out else None
+        if dest and args.skip_existing and os.path.exists(dest):
+            n_ok += 1
+            continue
+        reason = skip_reason(arch, shape)
+        if reason:
+            n_skip += 1
+            row = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "skipped": reason}
+            print(f"[{tag}] SKIP: {reason}")
+        else:
+            try:
+                row = lower_cell(arch, shape, mp,
+                                 microbatches=args.microbatches)
+                n_ok += 1
+            except Exception as e:  # report, keep going
+                n_fail += 1
+                row = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[{tag}] FAIL: {type(e).__name__}: {e}")
+        if dest:
+            with open(dest, "w") as f:
+                json.dump(row, f, indent=1, default=str)
+    print(f"dryrun: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

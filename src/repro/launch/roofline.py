@@ -1,0 +1,463 @@
+"""Roofline terms from compiled dry-run artifacts (no real hardware).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` gives per-device HLO flops/bytes; collective bytes are
+not in cost_analysis, so we parse the post-SPMD HLO text and sum the shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighted by the wire cost of each primitive on a ring
+(all-reduce moves ~2x its payload; all-gather/reduce-scatter ~1x; permute 1x).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%x = bf16[8,128,2048]{...} all-reduce(...)` — possibly tuple-typed
+_SHAPE_RE = re.compile(r"(\w[\w\d]*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([^=]*?)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Sum result-shape bytes of collective ops (wire-weighted), per kind."""
+    per: Dict[str, int] = {}
+    total = 0
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        b = _shape_bytes(type_str)
+        w = int(b * _WIRE_FACTOR.get(kind, 1.0))
+        per[kind] = per.get(kind, 0) + w
+        total += w
+    return total, per
+
+
+# --- trip-count-aware collective accounting --------------------------------
+# lax.scan lowers to a while loop whose body is a separate HLO computation;
+# collectives inside it execute trip-count times per step.  We split the HLO
+# into computations, find `while` ops (condition/body refs), read the trip
+# count from the condition's compare-against-constant, and multiply each
+# computation's collective bytes by the product of its enclosing trip counts.
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_RE = re.compile(
+    r"(?:to_apply|condition|body|branch_computations)=\{?%?([\w\.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Computation name -> body text.  Headers look like
+    ``%name (params...) -> type {`` or ``ENTRY %main.1 (...) -> ... {``."""
+    comps: Dict[str, str] = {}
+    name, buf, depth = None, [], 0
+    for line in hlo_text.splitlines():
+        if name is None:
+            s = line.rstrip()
+            if (s.endswith("{") and not line.startswith(" ")
+                    and "->" in s and "(" in s):
+                m = _COMP_HEAD_RE.match(s)
+                if m:
+                    name, buf = m.group(1), []
+                    depth = s.count("{") - s.count("}")
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[name] = "\n".join(buf)
+            name = None
+        else:
+            buf.append(line)
+    return comps
+
+
+def collective_bytes_tripaware(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Collective bytes with while-loop bodies multiplied by trip counts
+    (nested loops compose).  Falls back to plain counting on parse trouble."""
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return collective_bytes(hlo_text)
+
+    # per-computation direct collective bytes
+    direct: Dict[str, Dict[str, int]] = {}
+    for name, body in comps.items():
+        t, per = collective_bytes(body)
+        direct[name] = per
+
+    # while edges: parent comp -> (body comp, trip) — the trip count comes
+    # from XLA's backend_config {"known_trip_count": {"n": "NN"}}
+    body_trip: Dict[str, int] = {}
+    parents: Dict[str, List[str]] = {}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            wm = _WHILE_RE.search(line)
+            if wm:
+                wbody = wm.group(2)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                body_trip[wbody] = max(body_trip.get(wbody, 1), trip)
+                parents.setdefault(wbody, []).append(name)
+        for m in _CALL_RE.finditer(body):
+            callee = m.group(1)
+            if callee in comps:
+                parents.setdefault(callee, []).append(name)
+
+    entry = None
+    for name in comps:
+        if "main" in name or name.startswith("ENTRY"):
+            entry = name
+    # effective multiplier per computation = product of trips on the path
+    # from entry (memoized DFS over the reversed call graph)
+    memo: Dict[str, float] = {}
+
+    def mult(name: str, depth=0) -> float:
+        if depth > 50:
+            return 1.0
+        if name in memo:
+            return memo[name]
+        memo[name] = 1.0  # break cycles
+        ps = parents.get(name, [])
+        base = 1.0 if (not ps or name == entry) else max(
+            mult(p, depth + 1) for p in ps)
+        m = base * body_trip.get(name, 1)
+        memo[name] = m
+        return m
+
+    per_total: Dict[str, int] = {}
+    total = 0
+    for name, per in direct.items():
+        f = mult(name)
+        for kind, b in per.items():
+            w = int(b * f)
+            per_total[kind] = per_total.get(kind, 0) + w
+            total += w
+    return total, per_total
+
+
+def collective_breakdown(hlo_text: str, top: int = 8) -> List[Dict]:
+    """Top collective-emitting ops with their trip multipliers — the §Perf
+    profiling view ('lowered.as_text() is the profile')."""
+    comps = _split_computations(hlo_text)
+    body_trip: Dict[str, int] = {}
+    parents: Dict[str, List[str]] = {}
+    for name, body in comps.items():
+        for line in body.splitlines():
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                body_trip[wm.group(2)] = max(body_trip.get(wm.group(2), 1),
+                                             trip)
+                parents.setdefault(wm.group(2), []).append(name)
+        for m in _CALL_RE.finditer(body):
+            if m.group(1) in comps:
+                parents.setdefault(m.group(1), []).append(name)
+    memo: Dict[str, float] = {}
+
+    def mult(name: str, depth=0) -> float:
+        if depth > 50 or name in memo:
+            return memo.get(name, 1.0)
+        memo[name] = 1.0
+        ps = parents.get(name, [])
+        base = max((mult(p, depth + 1) for p in ps), default=1.0)
+        memo[name] = base * body_trip.get(name, 1)
+        return memo[name]
+
+    rows = []
+    for name, body in comps.items():
+        f = mult(name)
+        for m in _OP_RE.finditer(body):
+            kind = m.group(2).replace("-start", "")
+            b = _shape_bytes(m.group(1))
+            w = b * _WIRE_FACTOR.get(kind, 1.0)
+            # grab metadata op_name if present on the line
+            line = body[m.start(): body.find("\n", m.start())]
+            nm = re.search(r'op_name="([^"]{0,120})', line)
+            rows.append({
+                "kind": kind, "bytes": int(b), "trips": int(f),
+                "wire_total": int(w * f), "comp": name[:40],
+                "op": nm.group(1) if nm else "",
+            })
+    rows.sort(key=lambda r: -r["wire_total"])
+    return rows[:top]
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float               # per device
+    hlo_bytes: float               # per device
+    coll_bytes: float              # per device (wire-weighted)
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0       # 6*N*D global
+    bytes_per_device: Optional[float] = None   # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound step time: how close the
+        step is to the pure-compute roofline."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        useful = self.model_flops / self.n_devices / PEAK_FLOPS
+        return useful / t_bound
+
+    @property
+    def flops_utilization(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS: fraction of compiled compute that is
+        'useful' (catches remat/redundancy waste)."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / (self.hlo_flops * self.n_devices)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "devices": self.n_devices,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.coll_bytes / 1e9,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "bottleneck": self.bottleneck,
+            "model_gflops_global": self.model_flops / 1e9,
+            "flops_util": self.flops_utilization,
+            "roofline_frac": self.roofline_fraction,
+            "coll_breakdown": self.coll_breakdown,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def analyze(arch: str, shape: str, mesh_name: str, n_devices: int,
+            compiled, model_flops: float,
+            extra_flops: float = 0.0, extra_bytes: float = 0.0,
+            coll_multiplier: float = 1.0) -> RooflineReport:
+    """``extra_*`` are the per-device scan trip-count corrections (see
+    scan_correction); ``coll_multiplier`` scales collective bytes found
+    inside scan bodies by the same reasoning (approximated by the caller)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # some backends return [dict]
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0)) + extra_flops
+    byts = float(ca.get("bytes accessed", 0.0)) + extra_bytes
+    text = compiled.as_text()
+    if coll_multiplier == "tripaware":
+        coll, breakdown = collective_bytes_tripaware(text)
+    else:
+        coll, breakdown = collective_bytes(text)
+        coll = int(coll * coll_multiplier)
+    mem = None
+    try:
+        m = compiled.memory_analysis()
+        if m is not None:
+            mem = float(getattr(m, "temp_size_in_bytes", 0)
+                        + getattr(m, "argument_size_in_bytes", 0)
+                        + getattr(m, "output_size_in_bytes", 0)
+                        - getattr(m, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=float(coll),
+        coll_breakdown=breakdown, model_flops=model_flops,
+        bytes_per_device=mem,
+    )
+
+
+# ---------------------------------------------------------------------------
+# scan trip-count correction
+# ---------------------------------------------------------------------------
+# XLA's module-level cost_analysis counts a while-loop (lax.scan) body ONCE
+# regardless of trip count (verified in tests/test_roofline.py), so the raw
+# numbers under-count the scanned layers by (reps - 1) bodies.  We report the
+# raw numbers AND an additive correction from an analytic per-layer cost
+# model; both appear in EXPERIMENTS.md §Roofline.
+
+def _attn_token_flops(cfg, kv_len: int, kind: str) -> float:
+    h, dh, dv = cfg.n_heads, cfg.head_dim, cfg.v_dim
+    d = cfg.d_model
+    if kind == "mla":
+        r = cfg.rope_head_dim
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        proj = 2 * (d * qr + qr * h * (dh + r) + d * (kvr + r)
+                    + kvr * h * (dh + dv) + h * dv * d)
+        attn = 2 * h * ((dh + r) + dv) * kv_len
+        return proj + attn
+    kh = cfg.n_kv_heads
+    proj = 2 * (d * h * dh + 2 * d * kh * dh + h * dv * d)
+    attn = 2 * h * (dh + dv) * kv_len
+    return proj + attn
+
+
+def _mixer_token_flops(cfg, mixer: str, kv_len: int) -> float:
+    d = cfg.d_model
+    if mixer in ("attn",):
+        return _attn_token_flops(cfg, kv_len, "gqa")
+    if mixer == "attn_local":
+        return _attn_token_flops(cfg, min(kv_len, cfg.sliding_window), "gqa")
+    if mixer == "attn_mla":
+        return _attn_token_flops(cfg, kv_len, "mla")
+    if mixer == "mamba":
+        di = cfg.mamba_expand * d
+        n = cfg.mamba_d_state
+        dtr = max(1, (d + 15) // 16)
+        return 2 * (d * 2 * di + cfg.mamba_d_conv * di
+                    + di * (dtr + 2 * n) + dtr * di + 5 * di * n + di * d)
+    if mixer == "mlstm":
+        di = 2 * d
+        dh = di // cfg.n_heads
+        chunk = 256
+        return 2 * (d * 2 * di + 4 * di + 3 * di * di
+                    + 2 * di * chunk + 2 * di * dh + di * d)
+    if mixer == "slstm":
+        dh = d // cfg.n_heads
+        dff = int(d * 8 / 3)
+        return 2 * (4 * d * d + 4 * cfg.n_heads * dh * dh + d * dff)
+    raise ValueError(mixer)
+
+
+def _ffn_token_flops(cfg, ffn: str) -> float:
+    d = cfg.d_model
+    dense = 2 * 3 * d * cfg.d_ff
+    if ffn == "none":
+        return 0.0
+    if ffn == "dense":
+        return dense
+    routed = (cfg.capacity_factor * cfg.top_k + cfg.n_shared_experts) \
+        * 2 * 3 * d * cfg.d_ff_expert + 2 * d * cfg.n_experts
+    if ffn == "moe_residual":
+        routed += dense
+    return routed
+
+
+def layer_flops(cfg, idx: int, tokens: int, kv_len: int, kind: str) -> float:
+    spec = cfg.block_specs()[idx]
+    per_tok = _mixer_token_flops(cfg, spec.mixer, kv_len) \
+        + _ffn_token_flops(cfg, spec.ffn)
+    mult = 3.0 if kind == "train" else 1.0            # fwd+bwd
+    if kind == "train" and cfg.remat in ("full", "dots"):
+        mult += 1.0                                    # recompute fwd
+    return per_tok * tokens * mult
+
+
+def _layer_param_bytes(cfg, idx: int) -> float:
+    dt = 2 if cfg.param_dtype == "bfloat16" else 4
+    return cfg._layer_params(idx) * dt
+
+
+def layer_bytes(cfg, idx: int, tokens_local: int, kind: str) -> float:
+    """Rough per-layer HBM bytes (global / n_devices applied by caller for
+    params via sharding; here we return GLOBAL bytes assuming params are
+    read once per device-group): weights read (+ grad write on train) +
+    ~12 activation tensors r/w per token."""
+    w = _layer_param_bytes(cfg, idx)
+    acts = 12 * tokens_local * cfg.d_model * 2
+    mult = 3.0 if kind == "train" else 1.0
+    return w * mult + acts * mult
+
+
+def scan_correction(cfg, kind: str, seq_len: int, global_batch: int,
+                    n_devices: int) -> Tuple[float, float]:
+    """(extra_flops, extra_bytes) PER DEVICE to add to cost_analysis numbers:
+    (reps - 1) x scan-body cost (XLA counts the body once)."""
+    pre, p, reps, rem = cfg.layout()
+    if reps <= 1:
+        return 0.0, 0.0
+    if kind == "decode":
+        tokens = global_batch
+        kv = seq_len
+    else:
+        tokens = seq_len * global_batch
+        kv = seq_len / 2  # causal average
+    tokens_local = tokens / max(n_devices, 1)
+    f = sum(layer_flops(cfg, pre + pos, tokens, kv, kind)
+            for pos in range(p))
+    b = sum(layer_bytes(cfg, pre + pos, tokens_local, kind)
+            for pos in range(p))
+    # params are sharded across the model axis (and fsdp): approximate the
+    # per-device weight slice as 1/n_devices of global for flops; bytes use
+    # tokens_local + per-device weight slice
+    extra_flops = (reps - 1) * f / max(n_devices, 1)
+    w_local = sum(_layer_param_bytes(cfg, pre + pos)
+                  for pos in range(p)) / max(n_devices, 1)
+    extra_bytes = (reps - 1) * (w_local * (3.0 if kind == "train" else 1.0)
+                                + 12 * tokens_local * cfg.d_model * 2
+                                * (3.0 if kind == "train" else 1.0))
+    return extra_flops, extra_bytes
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    tokens_override: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6*N*D (train: fwd+bwd over D tokens; prefill: 2*N*D;
+    decode: 2*N_active*B tokens per step).  MoE: active params."""
+    n_active = cfg.active_param_count()
+    if tokens_override is not None:
+        tokens = tokens_override
+    elif shape_kind == "decode":
+        tokens = global_batch           # one new token per sequence
+    else:
+        tokens = seq_len * global_batch
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * tokens

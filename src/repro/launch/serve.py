@@ -1,0 +1,62 @@
+"""Serving driver: batched generation over the model zoo.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --requests 6 --prompt-len 12 --new-tokens 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models import lm_init, param_values
+from repro.serve import EncDecEngine, Request, ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    values = param_values(lm_init(jax.random.PRNGKey(args.seed), cfg))
+    rng = np.random.default_rng(args.seed)
+    scfg = ServeConfig(max_batch=args.max_batch,
+                       max_len=args.prompt_len + args.new_tokens + 8)
+
+    t0 = time.time()
+    if cfg.is_encdec:
+        eng = EncDecEngine(cfg, values, scfg)
+        frames = rng.normal(size=(args.requests, 16, cfg.d_model)) \
+            .astype(np.float32)
+        outs = eng.transcribe(frames, max_new_tokens=args.new_tokens)
+        for i, o in enumerate(outs):
+            print(f"req {i}: {o}")
+    else:
+        eng = ServeEngine(cfg, values, scfg)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab, args.prompt_len)
+                        .astype(np.int32),
+                        max_new_tokens=args.new_tokens)
+                for i in range(args.requests)]
+        outs = eng.generate(reqs)
+        for rid in sorted(outs):
+            print(f"req {rid}: {outs[rid]}")
+    dt = time.time() - t0
+    total = args.requests * args.new_tokens
+    print(f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s, "
+          f"batch {args.max_batch})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .config import BlockSpec, ModelConfig, reduced
+from .layers import Param, is_param, param_axes, param_values, tree_cast
+from .lm import cache_axes, encdec_apply, init_caches, lm_apply, lm_init, lm_loss
+
+__all__ = [k for k in dir() if not k.startswith("_")]

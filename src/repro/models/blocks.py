@@ -1,0 +1,190 @@
+"""Transformer/SSM blocks: pre-norm mixer + pre-norm FFN/MoE, by BlockSpec."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import (
+    ATTN,
+    ATTN_LOCAL,
+    ATTN_MLA,
+    FFN_DENSE,
+    FFN_MOE,
+    FFN_MOE_RESIDUAL,
+    FFN_NONE,
+    MAMBA,
+    MLSTM,
+    SLSTM,
+    BlockSpec,
+    ModelConfig,
+)
+from .layers import (
+    attention_apply,
+    attention_init,
+    ffn_apply,
+    ffn_init,
+    mamba_apply,
+    mamba_init,
+    mla_apply,
+    mla_init,
+    mlstm_apply,
+    mlstm_init,
+    moe_apply,
+    moe_init,
+    rmsnorm,
+    rmsnorm_init,
+    slstm_apply,
+    slstm_init,
+)
+
+
+def block_init(key, cfg: ModelConfig, spec: BlockSpec, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.mixer in (ATTN, ATTN_LOCAL):
+        p["mixer"] = attention_init(k1, cfg, dtype)
+    elif spec.mixer == ATTN_MLA:
+        p["mixer"] = mla_init(k1, cfg, dtype)
+    elif spec.mixer == MAMBA:
+        p["mixer"] = mamba_init(k1, cfg, dtype)
+    elif spec.mixer == MLSTM:
+        p["mixer"] = mlstm_init(k1, cfg, dtype)
+    elif spec.mixer == SLSTM:
+        p["mixer"] = slstm_init(k1, cfg, dtype)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn != FFN_NONE:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+    if spec.ffn == FFN_DENSE:
+        p["ffn"] = ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ffn == FFN_MOE:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    elif spec.ffn == FFN_MOE_RESIDUAL:
+        p["moe"] = moe_init(k2, cfg, dtype)
+        p["ffn"] = ffn_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_apply(
+    params,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    x,
+    positions,
+    cache: Optional[Dict] = None,
+    kv_source: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (x, new_cache_or_state, aux_loss)."""
+    from repro.parallel.sharding import shard
+
+    # Megatron-SP: the residual stream lives seq-sharded between blocks (a
+    # no-op unless the "seq_res" rule maps to a mesh axis); the norm runs on
+    # the shard, the mixer/FFN gather the sequence and their TP outputs
+    # reduce-scatter back.
+    x = shard(x, "batch", "seq_res", None)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    h = shard(h, "batch", None, None)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mixer in (ATTN, ATTN_LOCAL):
+        window = cfg.sliding_window if spec.mixer == ATTN_LOCAL else 0
+        out, new_cache = attention_apply(params["mixer"], cfg, h, positions,
+                                         window=window, cache=cache,
+                                         kv_source=kv_source)
+    elif spec.mixer == ATTN_MLA:
+        out, new_cache = mla_apply(params["mixer"], cfg, h, positions,
+                                   cache=cache)
+    elif spec.mixer == MAMBA:
+        out, new_cache = mamba_apply(params["mixer"], cfg, h, state=cache)
+    elif spec.mixer == MLSTM:
+        out, new_cache = mlstm_apply(params["mixer"], cfg, h, state=cache)
+    elif spec.mixer == SLSTM:
+        out, new_cache = slstm_apply(params["mixer"], cfg, h, state=cache)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + shard(out, "batch", "seq_res", None)
+
+    if spec.ffn != FFN_NONE:
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        h = shard(h, "batch", None, None)
+        if spec.ffn == FFN_DENSE:
+            x = x + shard(ffn_apply(params["ffn"], h, cfg.act),
+                          "batch", "seq_res", None)
+        elif spec.ffn == FFN_MOE:
+            mo, aux = moe_apply(params["moe"], cfg, h, cfg.act)
+            x = x + shard(mo, "batch", "seq_res", None)
+        elif spec.ffn == FFN_MOE_RESIDUAL:  # Arctic: dense residual || MoE
+            mo, aux = moe_apply(params["moe"], cfg, h, cfg.act)
+            x = x + shard(mo + ffn_apply(params["ffn"], h, cfg.act),
+                          "batch", "seq_res", None)
+    return x, new_cache, aux
+
+
+def init_cache_for_block(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                         max_len: int, dtype=jnp.bfloat16) -> Optional[Dict]:
+    """Decode-time cache/state skeleton for one layer."""
+    if spec.mixer in (ATTN, ATTN_LOCAL):
+        window = cfg.sliding_window if spec.mixer == ATTN_LOCAL else 0
+        T = min(max_len, window) if window else max_len  # ring for local layers
+        return {
+            "k": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, T, cfg.n_kv_heads, cfg.v_dim), dtype),
+            "pos": jnp.full((T,), -1, jnp.int32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if spec.mixer == ATTN_MLA:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, 1, cfg.rope_head_dim), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if spec.mixer == MAMBA:
+        di = cfg.mamba_expand * cfg.d_model
+        return {
+            "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        }
+    if spec.mixer == MLSTM:
+        di = 2 * cfg.d_model
+        dh = di // cfg.n_heads
+        return {
+            "C": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+            "N": jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), dtype),
+        }
+    if spec.mixer == SLSTM:
+        dh = cfg.d_model // cfg.n_heads
+        z = jnp.zeros((batch, cfg.n_heads, dh), jnp.float32)
+        return {"c": z, "n": z + 1e-6, "h": z, "m": z - 10.0}
+    raise ValueError(spec.mixer)
+
+
+def cache_axes_for_block(cfg: ModelConfig, spec: BlockSpec) -> Optional[Dict]:
+    """Logical axes parallel to init_cache_for_block's value tree."""
+    if spec.mixer in (ATTN, ATTN_LOCAL):
+        return {
+            "k": ("batch", "seq_kv", "kv_heads", None),
+            "v": ("batch", "seq_kv", "kv_heads", None),
+            "pos": ("seq_kv",),
+            "len": (),
+        }
+    if spec.mixer == ATTN_MLA:
+        return {
+            "ckv": ("batch", "seq_kv", "kv_lora"),
+            "k_rope": ("batch", "seq_kv", None, None),
+            "len": (),
+        }
+    if spec.mixer == MAMBA:
+        return {"conv": ("batch", None, "mamba_inner"),
+                "ssm": ("batch", "mamba_inner", None)}
+    if spec.mixer == MLSTM:
+        return {"C": ("batch", None, None, None),
+                "N": ("batch", None, None),
+                "conv": ("batch", None, "lstm_inner")}
+    if spec.mixer == SLSTM:
+        ax = ("batch", None, None)
+        return {"c": ax, "n": ax, "h": ax, "m": ax}
+    raise ValueError(spec.mixer)

@@ -1,0 +1,822 @@
+"""Functional layers for the model zoo (no flax — plain pytrees).
+
+Every ``*_init`` returns a pytree whose leaves are :class:`Param` (value +
+logical axes); ``*_apply`` consumes the matching *value* tree.  Sharding
+annotations use logical names resolved through repro.parallel.sharding rules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard
+
+from .config import ModelConfig
+
+
+class Param:
+    """A parameter leaf: value + logical axes.  Registered as a pytree node
+    with ``axes`` as static metadata, so trees of Params flow through
+    jax.eval_shape / tree.map while the sharding annotation rides along —
+    abstract init of the 480B configs never allocates."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def param_values(tree):
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def param_axes(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def _init(key, shape, axes, scale=None, dtype=jnp.float32) -> Param:
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    val = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return Param(val.astype(dtype), axes)
+
+
+def _zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def _ones(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": _ones((d,), ("embed",), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, dh] (rotates the last dim); positions: [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                          # [dh/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..,S,1,dh/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window, KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh, dv = cfg.head_dim, cfg.v_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h, dh), ("embed", "heads", "head_dim"), dtype=dtype),
+        "wk": _init(ks[1], (d, kh, dh), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": _init(ks[2], (d, kh, dv), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": _init(ks[3], (h, dv, d), ("heads", "head_dim", "embed"),
+                    scale=1.0 / math.sqrt(h * dv), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(dh, dtype)
+        p["knorm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _attend(q, k, v, mask, softcap: float = 0.0,
+            scale: Optional[float] = None):
+    """Dense path (short sequences / decode steps).
+    q: [B,S,Kh,G,dh]  k: [B,T,Kh,dh]  v: [B,T,Kh,dv]  mask: [B?,S,T]."""
+    scale = scale or 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+    return out
+
+
+def _pick_chunk(n: int, target: int, floor: int = 128) -> int:
+    """Largest divisor of n that is <= target (0 if none >= floor)."""
+    c = 0
+    for d in range(1, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            for cand in (d, n // d):
+                if floor <= cand <= target and cand > c:
+                    c = cand
+    return c
+
+
+def _attend_chunked(q, k, v, qpos, kpos, causal: bool, window: int,
+                    softcap: float, cq: int, ck: int,
+                    scale: Optional[float] = None):
+    """Online-softmax chunked attention — the consumption-centric scheme in
+    portable jnp (on TPU the Pallas kernel in repro.kernels is the fused
+    version; this path gives identical memory behaviour under XLA: the S x T
+    score matrix never materializes, peak extra memory is B*cq*H*ck).
+
+    q: [B,S,Kh,G,dh]  k: [B,T,Kh,dh]  v: [B,T,Kh,dv]
+    qpos: [B,S]  kpos: [T]  ->  [B,S,Kh,G,dv]
+    """
+    B, S, K, G, dh = q.shape
+    T = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale or 1.0 / math.sqrt(dh)
+    nq, nk = S // cq, T // ck
+
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, K, G, dh), 1, 0)
+    qp = jnp.moveaxis(qpos.reshape(B, nq, cq), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, K, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, K, dv), 1, 0)
+    kp = kpos.reshape(nk, ck)
+
+    def kv_block(st, blk):
+        m, l, acc, qi, qpi = st
+        kj, vj, kpj = blk
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (kpj >= 0)[None, None, :] & jnp.ones((B, cq, ck), bool)
+        if causal:
+            mask &= kpj[None, None, :] <= qpi[:, :, None]
+        if window:
+            mask &= kpj[None, None, :] > qpi[:, :, None] - window
+        mask = mask[:, :, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqkgt,btkv->bqkgv", p, vj.astype(jnp.float32))
+        return (m_new, l, acc, qi, qpi), None
+
+    kv_block = jax.checkpoint(kv_block)
+
+    def q_block(_, blk):
+        qi, qpi = blk
+        m0 = jnp.full((B, cq, K, G), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, cq, K, G), jnp.float32)
+        a0 = jnp.zeros((B, cq, K, G, dv), jnp.float32)
+        (m, l, acc, _, _), _ = lax.scan(kv_block, (m0, l0, a0, qi, qpi),
+                                        (kc, vc, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(v.dtype)
+
+    _, out = lax.scan(q_block, None, (qc, qp))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, K, G, dv)
+
+
+def _dispatch_attend(q, k, v, qpos, kpos, causal, window, softcap,
+                     chunk: int, scale=None):
+    """Choose chunked (long-seq training/prefill) vs dense attention.
+    ``kpos`` [T] carries absolute key positions (-1 = empty ring slot)."""
+    S, T = q.shape[1], k.shape[1]
+    cq = _pick_chunk(S, chunk) if chunk else 0
+    ck = _pick_chunk(T, max(chunk, 1) * 2) if chunk else 0
+    if cq and ck and S >= chunk and T > ck:
+        return _attend_chunked(q, k, v, qpos, kpos, causal, window, softcap,
+                               cq, ck, scale)
+    kp = kpos[None, :]
+    mask = (kp >= 0)[:, None, :] & jnp.ones((1, S, T), bool)
+    if causal:
+        mask = mask & (kp[:, None, :] <= qpos[..., None])
+    if window:
+        mask = mask & (kp[:, None, :] > qpos[..., None] - window)
+    return _attend(q, k, v, mask, softcap, scale)
+
+
+def attention_apply(params, cfg: ModelConfig, x, positions,
+                    window: int = 0, cache: Optional[Dict] = None,
+                    kv_source: Optional[jnp.ndarray] = None):
+    """Returns (out, new_cache).  ``cache``: {"k","v","len"} for decode;
+    ``kv_source``: cross-attention memory (whisper decoder)."""
+    B, S, D = x.shape
+    h, kh, dh, dv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
+    g = h // kh
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    src = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    if kv_source is None:  # self-attention: rotary on q & k
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else positions  # same positions
+        k = apply_rope(k, kpos, cfg.rope_theta)
+    q = shard(q.reshape(B, S, kh, g, dh), "batch", "seq", "kv_heads", None, None)
+
+    new_cache = None
+    if cache is not None:
+        # ring-buffer cache: write at len % T.  For global layers T = max_len
+        # (never wraps); for sliding-window layers T = window, so the slot
+        # being overwritten is exactly the key that just left the window.
+        # Batch-uniform positions assumed for decode (positions[0]).
+        T = cache["k"].shape[1]
+        if S >= T:
+            # prefilling more tokens than the ring holds (windowed layers):
+            # only the last T keys can matter; slot order is irrelevant since
+            # masking reads the absolute positions buffer
+            k_w, v_w = k[:, -T:], v[:, -T:]
+            pos_w = positions[0, -T:]
+            slot = jnp.zeros((), jnp.int32)
+        else:
+            k_w, v_w, pos_w = k, v, positions[0]
+            slot = cache["len"] % T
+        ck = lax.dynamic_update_slice(cache["k"],
+                                      k_w.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"],
+                                      v_w.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+        cpos = lax.dynamic_update_slice(
+            cache["pos"], pos_w.astype(jnp.int32), (slot,))
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "len": cache["len"] + S}
+        if S >= T:
+            # prefill: attend over the full in-flight keys (queries at early
+            # positions need keys the ring has already dropped)
+            k_att, v_att, kpos = k, v, positions[0]
+        else:
+            k_att, v_att, kpos = ck, cv, cpos
+    else:
+        k_att, v_att = k, v
+        kpos = jnp.arange(k.shape[1])
+
+    k_att = shard(k_att, "batch", "seq_kv", "kv_heads", None)
+    v_att = shard(v_att, "batch", "seq_kv", "kv_heads", None)
+    if kv_source is not None:  # cross-attention: full visibility
+        mask = jnp.ones((1, S, k_att.shape[1]), dtype=bool)
+        out = _attend(q, k_att, v_att, mask, cfg.logit_softcap)
+    else:
+        out = _dispatch_attend(q, k_att, v_att, positions, kpos,
+                               causal=True, window=window,
+                               softcap=cfg.logit_softcap,
+                               chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, h, dv)
+    out = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return shard(out, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    dh, dv, r = cfg.head_dim, cfg.v_dim, cfg.rope_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if qr:
+        p["wdq"] = _init(ks[0], (d, qr), ("embed", None), dtype=dtype)
+        p["q_norm"] = rmsnorm_init(qr, dtype)
+        p["wuq"] = _init(ks[1], (qr, h, dh + r), (None, "heads", "head_dim"),
+                         dtype=dtype)
+    else:
+        p["wuq"] = _init(ks[1], (d, h, dh + r), ("embed", "heads", "head_dim"),
+                         dtype=dtype)
+    p["wdkv"] = _init(ks[2], (d, kvr + r), ("embed", "kv_lora"), dtype=dtype)
+    p["kv_norm"] = rmsnorm_init(kvr, dtype)
+    p["wukv"] = _init(ks[3], (kvr, h, dh + dv), ("kv_lora", "heads", "head_dim"),
+                      dtype=dtype)
+    p["wo"] = _init(ks[4], (h, dv, d), ("heads", "head_dim", "embed"),
+                    scale=1.0 / math.sqrt(h * dv), dtype=dtype)
+    return p
+
+
+def mla_apply(params, cfg: ModelConfig, x, positions,
+              cache: Optional[Dict] = None):
+    """Latent attention; decode caches the compressed (c_kv, k_rope) pair —
+    the memory saving that makes 128-head attention serveable."""
+    B, S, D = x.shape
+    h, dh, dv, r = cfg.n_heads, cfg.head_dim, cfg.v_dim, cfg.rope_head_dim
+    kvr = cfg.kv_lora_rank
+    # queries
+    if cfg.q_lora_rank:
+        cq = rmsnorm(params["q_norm"], x @ params["wdq"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wuq"])
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # compressed kv + shared rope key
+    ckv_full = x @ params["wdkv"]                            # [B,S,kvr+r]
+    ckv = rmsnorm(params["kv_norm"], ckv_full[..., :kvr], cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)                      # [B,S,1,r]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["len"]
+        c_ckv = lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, idx, 0))
+        c_kr = lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0, 0))
+        new_cache = {"ckv": c_ckv, "k_rope": c_kr, "len": idx + S}
+        ckv, k_rope = c_ckv, c_kr
+    T = ckv.shape[1]
+
+    kv = jnp.einsum("btr,rhk->bthk", ckv, params["wukv"])
+    k_nope, v = kv[..., :dh], kv[..., dh:]
+
+    # fold the shared rope key into a single (dh + r)-dim head and reuse the
+    # generic (chunked) attention path — MHA with Kh = h, G = 1.  With a
+    # cache, slots beyond len hold zeros at kpos > qpos and mask out.
+    scale = 1.0 / math.sqrt(dh + r)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)[:, :, :, None, :]
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, h, r))], axis=-1)
+    qf = shard(qf, "batch", "seq", "heads", None, None)
+    kf = shard(kf, "batch", "seq_kv", "heads", None)
+    v = shard(v, "batch", "seq_kv", "heads", None)
+    out = _dispatch_attend(qf, kf, v, positions, jnp.arange(T),
+                           causal=True, window=0, softcap=0.0,
+                           chunk=cfg.attn_chunk, scale=scale)
+    out = out[:, :, :, 0, :]
+    out = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return shard(out, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFNs
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d: int, dff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _init(ks[0], (d, dff), ("embed", "ff"), dtype=dtype),
+        "wg": _init(ks[1], (d, dff), ("embed", "ff"), dtype=dtype),
+        "wo": _init(ks[2], (dff, d), ("ff", "embed"), dtype=dtype),
+    }
+
+
+def ffn_apply(params, x, act: str = "silu"):
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = a(x @ params["wg"]) * (x @ params["wi"])
+    h = shard(h, "batch", "seq", "ff")
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity dispatch, expert-parallel friendly
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, e, dff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e), ("embed", None), dtype=jnp.float32),
+        "wi": _init(ks[1], (e, d, dff), ("expert", "fsdp", "ff"), dtype=dtype),
+        "wg": _init(ks[2], (e, d, dff), ("expert", "fsdp", "ff"), dtype=dtype),
+        "wo": _init(ks[3], (e, dff, d), ("expert", "ff", "fsdp"), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[4], d, cfg.d_ff_expert * cfg.n_shared_experts,
+                               dtype)
+    return p
+
+
+def moe_apply(params, cfg: ModelConfig, x, act: str = "silu"):
+    """x: [B, S, d].  Per-sequence groups; sort-based dispatch into an
+    [B, E, C, d] buffer; grouped expert matmuls; combine with router weights.
+    Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * k * S / E))
+
+    logits = (x.astype(jnp.float32) @ params["router"])      # [B,S,E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = lax.top_k(gates, k)                         # [B,S,k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style)
+    me = gates.mean(axis=(0, 1))                             # [E]
+    ce = jax.nn.one_hot(topi, E).sum(axis=2).mean(axis=(0, 1))  # [E]
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    flat_e = topi.reshape(B, S * k)                          # [B, S*k]
+    sort_idx = jnp.argsort(flat_e, axis=-1)                  # local per-seq sort
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    # rank within expert segment
+    pos = jnp.arange(S * k)[None, :] - jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)        # overflow -> E*C
+
+    tok = sort_idx // k                                      # source token ids
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)      # [B, S*k, d]
+    ws = jnp.take_along_axis(topv.reshape(B, S * k), sort_idx, axis=-1)
+
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, dd, xx: bf.at[dd].add(xx))(buf, dest, xs)
+    buf = buf[:, :-1].reshape(B, E, C, d)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = a(jnp.einsum("becd,edf->becf", buf, params["wg"])) * \
+        jnp.einsum("becd,edf->becf", buf, params["wi"])
+    h = shard(h, "batch", "expert", None, "ff")
+    y = jnp.einsum("becf,efd->becd", h, params["wo"])
+    y = shard(y, "batch", "expert", None, None).reshape(B, E * C, d)
+
+    yc = jnp.take_along_axis(
+        jnp.pad(y, ((0, 0), (0, 1), (0, 0))),
+        jnp.minimum(dest, E * C)[..., None], axis=1)
+    yc = yc * (ws * keep).astype(y.dtype)[..., None]
+    out = jnp.zeros((B, S, d), x.dtype)
+    out = jax.vmap(lambda o, t, v: o.at[t].add(v))(out, tok, yc)
+
+    if cfg.n_shared_experts:
+        out = out + ffn_apply(params["shared"], x, act)
+    return shard(out, "batch", "seq", None), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — jamba's mixer
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dtr = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di), ("embed", "mamba_inner"), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.mamba_d_conv, di), ("conv", "mamba_inner"),
+                        scale=0.5, dtype=dtype),
+        "conv_b": _zeros((di,), ("mamba_inner",), dtype),
+        "x_proj": _init(ks[2], (di, dtr + 2 * n), ("mamba_inner", None), dtype=dtype),
+        "dt_proj": _init(ks[3], (dtr, di), (None, "mamba_inner"), dtype=dtype),
+        "dt_bias": _zeros((di,), ("mamba_inner",), dtype),
+        "A_log": Param(jnp.log(jnp.tile(jnp.arange(1., n + 1.), (di, 1))),
+                       ("mamba_inner", None)),
+        "D": _ones((di,), ("mamba_inner",), dtype),
+        "out_proj": _init(ks[4], (di, d), ("mamba_inner", "embed"), dtype=dtype),
+    }
+
+
+def _causal_conv1d(u, w, b, state=None):
+    """u: [B,S,di]; w: [K,di] depthwise.  state: [B,K-1,di] for decode."""
+    K = w.shape[0]
+    if state is not None:
+        u_pad = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+        new_state = u_pad[:, -(K - 1):, :]
+    else:
+        u_pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = u_pad[:, -(K - 1):, :]
+    out = sum(u_pad[:, i: i + u.shape[1], :] * w[i] for i in range(K))
+    return out + b, new_state
+
+
+def mamba_apply(params, cfg: ModelConfig, x, state: Optional[Dict] = None):
+    """Returns (out, new_state); state = {"conv": [B,K-1,di], "ssm": [B,di,n]}."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dtr = max(1, math.ceil(d / 16))
+
+    uz = x @ params["in_proj"]
+    u, z = uz[..., :di], uz[..., di:]
+    u = shard(u, "batch", "seq", "mamba_inner")
+    u, conv_state = _causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                   None if state is None else state["conv"])
+    u = jax.nn.silu(u)
+
+    xdbc = u @ params["x_proj"]
+    dt = jax.nn.softplus(xdbc[..., :dtr] @ params["dt_proj"] + params["dt_bias"])
+    Bc = xdbc[..., dtr: dtr + n].astype(jnp.float32)         # [B,S,n]
+    Cc = xdbc[..., dtr + n:].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [di,n]
+
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * A)      # [B,S,di,n]
+    db = (dt.astype(jnp.float32) * u.astype(jnp.float32))[..., None] * \
+        Bc[:, :, None, :]                                    # [B,S,di,n]
+
+    if state is None:
+        def combine(a, b):
+            (a1, b1), (a2, b2) = a, b
+            return a2 * a1, a2 * b1 + b2
+        _, hs = lax.associative_scan(combine, (da, db), axis=1)
+        new_ssm = hs[:, -1]
+    else:
+        h0 = state["ssm"].astype(jnp.float32)
+        def step(h, ab):
+            a, b = ab
+            h = a * h + b
+            return h, h
+        new_ssm, hs = lax.scan(step, h0,
+                               (da.swapaxes(0, 1), db.swapaxes(0, 1)))
+        hs = hs.swapaxes(0, 1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc)
+    y = (y + u.astype(jnp.float32) * params["D"].astype(jnp.float32))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = {"conv": conv_state.astype(x.dtype),
+                 "ssm": new_ssm.astype(jnp.float32)}
+    return shard(out, "batch", "seq", None), new_state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunked parallel) + sLSTM (scalar, scan)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _init(ks[0], (d, 2 * di), ("embed", "lstm_inner"), dtype=dtype),
+        "conv_w": _init(ks[1], (4, di), ("conv", "lstm_inner"), scale=0.5,
+                        dtype=dtype),
+        "conv_b": _zeros((di,), ("lstm_inner",), dtype),
+        "wq": _init(ks[2], (di, di), ("lstm_inner", None), dtype=dtype),
+        "wk": _init(ks[3], (di, di), ("lstm_inner", None), dtype=dtype),
+        "wv": _init(ks[4], (di, di), ("lstm_inner", None), dtype=dtype),
+        "wif": _init(ks[5], (di, 2 * cfg.n_heads), ("lstm_inner", None),
+                     scale=0.01, dtype=dtype),
+        "skip": _ones((di,), ("lstm_inner",), dtype),  # learnable skip scale
+        "down": _init(ks[7], (di, d), ("lstm_inner", "embed"), dtype=dtype),
+        "out_norm": rmsnorm_init(di, dtype),
+    }
+
+
+def mlstm_apply(params, cfg: ModelConfig, x, state: Optional[Dict] = None,
+                chunk: int = 256):
+    """Chunked parallel mLSTM.  state = {"C": [B,H,dh,dh], "N": [B,H,dh],
+    "conv": [B,3,di]} for decode."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+
+    uz = x @ params["up"]
+    u, z = uz[..., :di], uz[..., di:]
+    c, conv_state = _causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                   None if state is None else state["conv"])
+    c = jax.nn.silu(c)
+    q = (c @ params["wq"]).reshape(B, S, H, dh).swapaxes(1, 2)  # [B,H,S,dh]
+    k = (c @ params["wk"]).reshape(B, S, H, dh).swapaxes(1, 2) / math.sqrt(dh)
+    v = (u @ params["wv"]).reshape(B, S, H, dh).swapaxes(1, 2)
+    gates = u @ params["wif"]                                 # [B,S,2H]
+    logi = jnp.clip(gates[..., :H], -12.0, 12.0).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32) + 2.0)
+    logi = logi.swapaxes(1, 2)                                # [B,H,S]
+    logf = logf.swapaxes(1, 2)
+
+    if state is not None:
+        C0 = state["C"].astype(jnp.float32)
+        N0 = state["N"].astype(jnp.float32)
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        N0 = jnp.zeros((B, H, dh), jnp.float32)
+
+    if S <= 4:  # single-step decode (unrolled)
+        ys = []
+        for t in range(S):
+            f_t = jnp.exp(logf[:, :, t])[..., None, None]
+            i_t = jnp.exp(logi[:, :, t])[..., None, None]
+            kv = k[:, :, t, :, None].astype(jnp.float32) * \
+                v[:, :, t, None, :].astype(jnp.float32)
+            C0 = f_t * C0 + i_t * kv
+            N0 = f_t[..., 0] * N0 + i_t[..., 0] * k[:, :, t].astype(jnp.float32)
+            qt = q[:, :, t].astype(jnp.float32)
+            num = jnp.einsum("bhd,bhdv->bhv", qt, C0)
+            den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, N0))[..., None]
+            ys.append(num / jnp.maximum(den, 1.0))
+        y = jnp.stack(ys, axis=2)
+        new_state = {"C": C0, "N": N0, "conv": conv_state}
+    else:  # chunked parallel (training / prefill), seeded from the state
+        nc = max(1, S // chunk)
+        cs = S // nc
+        qc = q.reshape(B, H, nc, cs, dh)
+        kc = k.reshape(B, H, nc, cs, dh)
+        vc = v.reshape(B, H, nc, cs, dh)
+        lic = logi.reshape(B, H, nc, cs)
+        lfc = logf.reshape(B, H, nc, cs)
+        cum_f = jnp.cumsum(lfc, axis=-1)                      # within chunk
+        tot_f = cum_f[..., -1]
+
+        # intra-chunk: D[i,j] = exp(cum_f_i - cum_f_j + logi_j), j <= i
+        dmat = cum_f[..., :, None] - cum_f[..., None, :] + lic[..., None, :]
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        att = jnp.einsum("bhnid,bhnjd->bhnij", qc.astype(jnp.float32),
+                         kc.astype(jnp.float32)) * jnp.exp(dmat)
+        y_intra = jnp.einsum("bhnij,bhnjd->bhnid", att, vc.astype(jnp.float32))
+        den_intra = att.sum(-1)                               # q_i . n_vec (intra)
+
+        # inter-chunk state scan
+        decay_in = jnp.exp(tot_f[..., None] - cum_f + lic)    # [B,H,n,cs]
+        kv_chunk = jnp.einsum("bhncd,bhncv,bhnc->bhndv",
+                              kc.astype(jnp.float32), vc.astype(jnp.float32),
+                              decay_in)
+        n_chunk = jnp.einsum("bhncd,bhnc->bhnd", kc.astype(jnp.float32),
+                             decay_in)
+
+        def scan_fn(carry, inp):
+            C_prev, N_prev = carry
+            kv_c, n_c, tf = inp
+            C_new = jnp.exp(tf)[..., None, None] * C_prev + kv_c
+            N_new = jnp.exp(tf)[..., None] * N_prev + n_c
+            return (C_new, N_new), (C_prev, N_prev)
+
+        (Cl, Nl), (Cs_, Ns_) = lax.scan(
+            scan_fn, (C0, N0),
+            (kv_chunk.transpose(2, 0, 1, 3, 4), n_chunk.transpose(2, 0, 1, 3),
+             tot_f.transpose(2, 0, 1)))
+        Cs_ = Cs_.transpose(1, 2, 0, 3, 4)                    # [B,H,n,dh,dh]
+        Ns_ = Ns_.transpose(1, 2, 0, 3)
+        qdec = qc.astype(jnp.float32) * jnp.exp(cum_f)[..., None]
+        y_inter = jnp.einsum("bhncd,bhndv->bhncv", qdec, Cs_)
+        den_inter = jnp.einsum("bhncd,bhnd->bhnc", qdec, Ns_)
+
+        num = y_intra + y_inter
+        den = jnp.abs(den_intra + den_inter)[..., None]       # |q . n|
+        y = (num / jnp.maximum(den, 1.0)).reshape(B, H, S, dh)
+        new_state = {"C": Cl, "N": Nl, "conv": conv_state}
+
+    y = y.swapaxes(1, 2).reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    y = y + params["skip"] * c                                # learnable skip
+    y = y * jax.nn.silu(z)
+    out = y @ params["down"]
+    return shard(out, "batch", "seq", None), new_state
+
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dff = max(128, ((int(d * 4 / 3) + 127) // 128) * 128)  # shardable 4/3 GLU
+    ks = jax.random.split(key, 5)
+    return {
+        "win": _init(ks[0], (d, 4 * d), ("embed", "lstm_inner"), dtype=dtype),
+        "rrec": _init(ks[1], (H, dh, 4 * dh), (None, None, None),
+                      scale=1.0 / math.sqrt(dh), dtype=dtype),
+        "bias": _zeros((4 * d,), ("lstm_inner",), dtype),
+        "out_norm": rmsnorm_init(d, dtype),
+        "up": _init(ks[2], (d, 2 * dff), ("embed", "ff"), dtype=dtype),
+        "down": _init(ks[3], (dff, d), ("ff", "embed"), dtype=dtype),
+    }
+
+
+def _slstm_cell(c, n, m, pre):
+    """One stabilized sLSTM step (pre = Wx_t + h_{t-1} R already formed)."""
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m, ii)
+    i_p = jnp.exp(ii - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * zt
+    n_new = f_p * n + i_p
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, m_new, h_new
+
+
+def _slstm_scan_plain(wx, rrec, c0, n0, h0, m0):
+    """Reference scan (jax-AD'd): the weight gradient of ``rrec`` contracts
+    the (sharded) batch axis INSIDE the time loop -> one all-reduce per step
+    per layer under SPMD.  Kept for tests; training uses the custom-VJP
+    version below."""
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t + jnp.einsum("bhd,hdk->bhk", h, rrec)
+        c, n, m, h = _slstm_cell(c, n, m, pre)
+        return (c, n, h, m), h
+
+    (cl, nl, hl, ml), hs = lax.scan(step, (c0, n0, h0, m0),
+                                    wx.swapaxes(0, 1))
+    return hs, (cl, nl, hl, ml)
+
+
+@jax.custom_vjp
+def _slstm_scan(wx, rrec, c0, n0, h0, m0):
+    return _slstm_scan_plain(wx, rrec, c0, n0, h0, m0)
+
+
+def _slstm_scan_fwd(wx, rrec, c0, n0, h0, m0):
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t + jnp.einsum("bhd,hdk->bhk", h, rrec)
+        c_new, n_new, m_new, h_new = _slstm_cell(c, n, m, pre)
+        return (c_new, n_new, h_new, m_new), (h_new, c, n, m, h, pre)
+
+    (cl, nl, hl, ml), ys = lax.scan(step, (c0, n0, h0, m0),
+                                    wx.swapaxes(0, 1))
+    hs, c_prev, n_prev, m_prev, h_prev, pres = ys
+    return (hs, (cl, nl, hl, ml)), (rrec, c_prev, n_prev, m_prev, h_prev,
+                                    pres)
+
+
+def _slstm_scan_bwd(res, cots):
+    """Deferred recurrent-weight gradient: the reverse scan only propagates
+    state cotangents and EMITS dpre per step; the batch+time contraction for
+    d(rrec) happens once afterwards (one all-reduce per layer instead of one
+    per time step — the §Perf fix for recurrent archs)."""
+    rrec, c_prev, n_prev, m_prev, h_prev, pres = res
+    dhs, (dcl, dnl, dhl, dml) = cots
+
+    def step(carry, inp):
+        dc, dn, dh, dm = carry
+        dh_out, c, n, m, pre = inp
+        dh_tot = dh + dh_out
+        _, cell_vjp = jax.vjp(_slstm_cell, c, n, m, pre)
+        dc_p, dn_p, dm_p, dpre = cell_vjp((dc, dn, dm, dh_tot))
+        dh_p = jnp.einsum("bhk,hdk->bhd", dpre, rrec)
+        return (dc_p, dn_p, dh_p, dm_p), dpre
+
+    (dc0, dn0, dh0, dm0), dpres = lax.scan(
+        step, (dcl, dnl, dhl, dml),
+        (dhs, c_prev, n_prev, m_prev, pres), reverse=True)
+    dwx = dpres.swapaxes(0, 1)
+    # ONE contraction over (time, batch) -> single all-reduce under SPMD
+    drrec = jnp.einsum("sbhd,sbhk->hdk", h_prev, dpres)
+    return dwx, drrec, dc0, dn0, dh0, dm0
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_apply(params, cfg: ModelConfig, x, state: Optional[Dict] = None):
+    """Sequential scalar-memory LSTM with per-head recurrence + GLU out.
+    state = {"c","n","h","m"} each [B,H,dh]."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = (x @ params["win"] + params["bias"]).astype(jnp.float32)
+    wx = wx.reshape(B, S, H, 4 * dh)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        c0, n0, h0 = zeros, zeros + 1e-6, zeros
+        m0 = jnp.zeros((B, H, dh), jnp.float32) - 10.0
+    else:
+        c0, n0 = state["c"], state["n"]
+        h0, m0 = state["h"], state["m"]
+
+    rrec = params["rrec"].astype(jnp.float32)
+    hs, (cl, nl, hl, ml) = _slstm_scan(wx, rrec, c0, n0, h0, m0)
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    up = y @ params["up"]
+    dff = params["down"].shape[0]
+    y = jax.nn.gelu(up[..., :dff]) * up[..., dff:]
+    out = y @ params["down"]
+    new_state = {"c": cl, "n": nl, "h": hl, "m": ml}
+    return shard(out, "batch", "seq", None), new_state

@@ -1,0 +1,383 @@
+"""LM drivers: decoder-only, enc-dec (whisper), VLM-backbone (llava).
+
+Layers are scanned over the smallest repeating period of the block-spec
+sequence (HLO stays O(period) — a 60-layer 236B model lowers as one scan body
+plus remainder), with optional rematerialization per period.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import shard
+
+from .blocks import block_apply, block_init, init_cache_for_block
+from .config import ModelConfig
+from .layers import Param, is_param, param_values, rmsnorm, rmsnorm_init, _init
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "full",
+    "dots": "dots",
+}
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def _stack_params(trees: List[Any]):
+    def stack(*leaves: Param) -> Param:
+        return Param(jnp.stack([l.value for l in leaves]),
+                     ("layers",) + tuple(leaves[0].axes))
+    return jax.tree.map(stack, *trees, is_leaf=is_param)
+
+
+def _layer_groups(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(prefix, period, reps, remainder) — see ModelConfig.layout()."""
+    return cfg.layout()
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def lm_init(key, cfg: ModelConfig):
+    dtype = _dtype(cfg.param_dtype)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    specs = cfg.block_specs()
+    pre, p, reps, rem = _layer_groups(cfg)
+
+    params: Dict[str, Any] = {
+        "embed": _init(keys[0], (cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                       scale=1.0, dtype=dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = _init(keys[1], (cfg.d_model, cfg.vocab),
+                               ("embed", "vocab"), dtype=dtype)
+    if cfg.frontend != "none":
+        # modality frontend STUB: a projection applied to precomputed
+        # frame/patch embeddings supplied by input_specs()
+        params["frontend_proj"] = _init(
+            keys[2], (cfg.d_model, cfg.d_model), ("embed", None), dtype=dtype)
+
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(keys[3], cfg.n_enc_layers)
+        enc_spec = specs[0]
+        params["encoder"] = _stack_params(
+            [block_init(k, cfg, enc_spec, dtype) for k in enc_keys])
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        dec_keys = jax.random.split(jax.random.fold_in(key, 999),
+                                    cfg.n_layers)
+        params["dec_cross"] = _stack_params(
+            [_cross_block_init(k, cfg, dtype) for k in dec_keys])
+
+    params["pre"] = {f"q{j}": block_init(keys[4 + j], cfg, specs[j], dtype)
+                     for j in range(pre)}
+    # scanned periods
+    scan_params = {}
+    for pos in range(p):
+        trees = [block_init(keys[4 + pre + r * p + pos], cfg,
+                            specs[pre + pos], dtype)
+                 for r in range(reps)]
+        scan_params[f"p{pos}"] = _stack_params(trees)
+    params["scan"] = scan_params
+    rest = {}
+    for j in range(rem):
+        li = pre + reps * p + j
+        rest[f"r{j}"] = block_init(keys[4 + li], cfg, specs[li], dtype)
+    params["rest"] = rest
+    return params
+
+
+def _cross_block_init(key, cfg: ModelConfig, dtype):
+    from .layers import attention_init
+    return {
+        "norm": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(key, cfg, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    raise ValueError(cfg.remat)
+
+
+def lm_apply(
+    values,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                    # [B, S_text]
+    positions: Optional[jnp.ndarray] = None,
+    extra_embeds: Optional[jnp.ndarray] = None,  # [B, S_img, d] frontend stub
+    caches: Optional[Dict] = None,
+    logits_dtype=jnp.float32,
+):
+    """Returns (logits [B,S,V], new_caches, aux_loss)."""
+    cdtype = _dtype(cfg.compute_dtype)
+    specs = cfg.block_specs()
+    pre, p, reps, rem = _layer_groups(cfg)
+
+    x = jnp.take(values["embed"], tokens, axis=0).astype(cdtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cdtype)
+    if extra_embeds is not None:
+        pe = extra_embeds.astype(cdtype) @ values["frontend_proj"].astype(cdtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    x = shard(x, "batch", "seq", None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def cast(tree):
+        return jax.tree.map(lambda v: v.astype(cdtype)
+                            if jnp.issubdtype(v.dtype, jnp.floating) else v,
+                            tree)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = None if caches is None else {"pre": {}, "rest": {}}
+
+    # ---- unrolled prefix (e.g. DeepSeek's first dense layer) --------------
+    for j in range(pre):
+        cache_j = None if caches is None else caches["pre"][f"q{j}"]
+        x, nc, a = block_apply(cast(values["pre"][f"q{j}"]), cfg, specs[j],
+                               x, positions, cache=cache_j)
+        aux_total = aux_total + a
+        if caches is not None:
+            new_caches["pre"][f"q{j}"] = nc
+
+    # ---- scanned periods ---------------------------------------------------
+    scan_vals = cast(values["scan"])
+    if caches is None:
+        def period_body(x, layer_vals):
+            aux = jnp.zeros((), jnp.float32)
+            for pos in range(p):
+                x, _, a = block_apply(layer_vals[f"p{pos}"], cfg,
+                                      specs[pre + pos], x, positions)
+                aux = aux + a
+            return x, aux
+
+        body = _maybe_remat(period_body, cfg)
+        if reps:
+            x, auxs = lax.scan(lambda c, lv: body(c, lv), x, scan_vals)
+            aux_total = aux_total + auxs.sum()
+    else:
+        def period_body_c(x, inp):
+            layer_vals, cache_slice = inp
+            aux = jnp.zeros((), jnp.float32)
+            new_slice = {}
+            for pos in range(p):
+                x, nc, a = block_apply(layer_vals[f"p{pos}"], cfg,
+                                       specs[pre + pos], x, positions,
+                                       cache=cache_slice[f"p{pos}"])
+                new_slice[f"p{pos}"] = nc
+                aux = aux + a
+            return x, (new_slice, aux)
+
+        if reps:
+            x, (new_scan_caches, auxs) = lax.scan(
+                period_body_c, x, (scan_vals, caches["scan"]))
+            aux_total = aux_total + auxs.sum()
+        else:
+            new_scan_caches = caches["scan"]
+        new_caches["scan"] = new_scan_caches
+
+    # ---- unrolled remainder -------------------------------------------------
+    for j in range(rem):
+        li = pre + reps * p + j
+        cache_j = None if caches is None else caches["rest"][f"r{j}"]
+        x, nc, a = block_apply(cast(values["rest"][f"r{j}"]), cfg, specs[li],
+                               x, positions, cache=cache_j)
+        aux_total = aux_total + a
+        if caches is not None:
+            new_caches["rest"][f"r{j}"] = nc
+
+    x = rmsnorm(values["final_norm"], x, cfg.norm_eps)
+    head = (values["embed"].T if cfg.tie_embeddings else values["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdtype))
+    if cfg.logit_softcap:
+        cap = cfg.logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    logits = shard(logits.astype(logits_dtype), "batch", "seq", "vocab")
+    return logits, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# whisper-style enc-dec
+# ---------------------------------------------------------------------------
+
+def encdec_apply(
+    values,
+    cfg: ModelConfig,
+    frames: jnp.ndarray,                    # [B, S_enc, d] precomputed (stub)
+    tokens: jnp.ndarray,                    # [B, S_dec]
+    positions: Optional[jnp.ndarray] = None,
+    caches: Optional[Dict] = None,
+    enc_out: Optional[jnp.ndarray] = None,  # reuse from prefill during decode
+    logits_dtype=jnp.float32,
+):
+    """Returns (logits, new_caches, enc_out, aux)."""
+    cdtype = _dtype(cfg.compute_dtype)
+    specs = cfg.block_specs()
+    B = tokens.shape[0]
+
+    # --- encoder (bidirectional attention over frames) -------------------
+    if enc_out is None:
+        h = frames.astype(cdtype) @ values["frontend_proj"].astype(cdtype)
+        h = shard(h, "batch", "seq", None)
+        epos = jnp.broadcast_to(jnp.arange(h.shape[1])[None, :],
+                                (B, h.shape[1]))
+        enc_vals = jax.tree.map(lambda v: v.astype(cdtype)
+                                if jnp.issubdtype(v.dtype, jnp.floating) else v,
+                                values["encoder"])
+
+        # bidirectional: emulate by attending with an all-true mask via
+        # kv_source trick (see attention_apply: cross-attn mask is full)
+        def enc_body_bidir(x, layer_vals):
+            x, _, _ = block_apply(layer_vals, cfg, specs[0], x, epos,
+                                  kv_source=x)
+            return x, ()
+
+        h, _ = lax.scan(enc_body_bidir, h, enc_vals)
+        enc_out = rmsnorm(values["enc_norm"], h, cfg.norm_eps)
+
+    # --- decoder: self-attn (cached) + cross-attn + ffn -------------------
+    x = jnp.take(values["embed"], tokens, axis=0).astype(cdtype)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = shard(x, "batch", "seq", None)
+
+    dec_vals = jax.tree.map(lambda v: v.astype(cdtype)
+                            if jnp.issubdtype(v.dtype, jnp.floating) else v,
+                            values["scan"])
+    cross_vals = jax.tree.map(lambda v: v.astype(cdtype)
+                              if jnp.issubdtype(v.dtype, jnp.floating) else v,
+                              values["dec_cross"])
+
+    from .layers import attention_apply
+
+    def dec_body(x, inp):
+        if caches is None:
+            layer_vals, cross = inp
+            cache_slice = None
+        else:
+            layer_vals, cross, cache_slice = inp
+        x, nc, _ = block_apply(layer_vals["p0"], cfg, specs[0], x, positions,
+                               cache=(None if cache_slice is None
+                                      else cache_slice["p0"]))
+        hh = rmsnorm(cross["norm"], x, cfg.norm_eps)
+        co, _ = attention_apply(cross["attn"], cfg, hh, positions,
+                                kv_source=enc_out)
+        x = x + co
+        if caches is None:
+            return x, ()
+        return x, {"p0": nc}
+
+    if caches is None:
+        x, _ = lax.scan(dec_body, x, (dec_vals, cross_vals))
+        new_caches = None
+    else:
+        x, new_scan = lax.scan(dec_body, x,
+                               (dec_vals, cross_vals, caches["scan"]))
+        new_caches = {"pre": {}, "scan": new_scan, "rest": {}}
+
+    x = rmsnorm(values["final_norm"], x, cfg.norm_eps)
+    head = (values["embed"].T if cfg.tie_embeddings else values["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdtype))
+    logits = shard(logits.astype(logits_dtype), "batch", "seq", "vocab")
+    return logits, new_caches, enc_out, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    specs = cfg.block_specs()
+    pre, p, reps, rem = _layer_groups(cfg)
+
+    def stack_caches(pos):
+        one = init_cache_for_block(cfg, specs[pre + pos], batch, max_len, dtype)
+        return jax.tree.map(
+            lambda v: jnp.broadcast_to(v, (reps,) + v.shape).copy(), one)
+
+    return {
+        "pre": {f"q{j}": init_cache_for_block(cfg, specs[j], batch, max_len,
+                                              dtype)
+                for j in range(pre)},
+        "scan": ({f"p{pos}": stack_caches(pos) for pos in range(p)}
+                 if reps else {}),
+        "rest": {f"r{j}": init_cache_for_block(cfg, specs[pre + reps * p + j],
+                                               batch, max_len, dtype)
+                 for j in range(rem)},
+    }
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axes tree parallel to init_caches (scan adds a layers dim)."""
+    from .blocks import cache_axes_for_block
+
+    specs = cfg.block_specs()
+    pre, p, reps, rem = _layer_groups(cfg)
+
+    def stacked(pos):
+        one = cache_axes_for_block(cfg, specs[pre + pos])
+        return jax.tree.map(lambda ax: ("layers",) + tuple(ax), one,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    return {
+        "pre": {f"q{j}": cache_axes_for_block(cfg, specs[j])
+                for j in range(pre)},
+        "scan": ({f"p{pos}": stacked(pos) for pos in range(p)}
+                 if reps else {}),
+        "rest": {f"r{j}": cache_axes_for_block(cfg, specs[pre + reps * p + j])
+                 for j in range(rem)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def lm_loss(values, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    """Next-token cross entropy.  batch: tokens [B,S], loss_mask [B,S],
+    optional extra_embeds (frontend stub; prepended positions carry no loss)."""
+    extra = batch.get("extra_embeds")
+    if cfg.is_encdec:
+        logits, _, _, aux = encdec_apply(values, cfg, batch["frames"],
+                                         batch["tokens"])
+    else:
+        logits, _, aux = lm_apply(values, cfg, batch["tokens"],
+                                  extra_embeds=extra)
+        if extra is not None:
+            logits = logits[:, extra.shape[1]:, :]
+    tgt = batch["tokens"][:, 1:]
+    lgt = logits[:, :-1, :].astype(jnp.float32)
+    mask = batch["loss_mask"][:, 1:].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lgt, axis=-1)
+    gold = jnp.take_along_axis(lgt, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    # z-loss stabilizer (PaLM): keeps logsumexp near 0
+    zloss = 1e-4 * jnp.mean(jnp.square(logz) * mask)
+    return loss + zloss + aux, {"loss": loss, "aux": aux,
+                                "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}

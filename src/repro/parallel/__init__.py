@@ -1,0 +1,12 @@
+from .sharding import (
+    LogicalRules,
+    axis_rules,
+    current_mesh,
+    current_rules,
+    logical_sharding,
+    mesh_context,
+    shard,
+    spec_for,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,87 @@
+"""GPipe-style pipeline parallelism over a mesh axis (optional path).
+
+The `pod` (or any) axis can be re-bound to pipeline stages: parameters are
+sharded layer-group-wise across the stage axis, activations flow stage to
+stage via ``jax.lax.ppermute`` inside ``shard_map``, and microbatches fill
+the pipeline (bubble fraction (P-1)/(M+P-1)).
+
+This module implements the schedule for a *stacked-stage* model: the caller
+provides per-stage apply ``fn(stage_params, x) -> x`` where stage_params has
+a leading stage axis sharded on the pipeline mesh axis.  Used by
+launch/dryrun.py's --pipeline mode and tested on small meshes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as PS
+
+
+def pipeline_apply(
+    fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    stage_params: Any,            # leaves [P_stages, ...] sharded on axis
+    x: jnp.ndarray,               # [M_microbatches, mb, ...] (replicated in)
+    mesh: Mesh,
+    axis: str = "pod",
+) -> jnp.ndarray:
+    """Run M microbatches through P pipeline stages; returns outputs in
+    microbatch order.  Implements the classic rotating-buffer GPipe loop:
+    at tick t, stage s processes microbatch (t - s) if 0 <= t - s < M."""
+    P = mesh.shape[axis]
+    M = x.shape[0]
+
+    def per_stage(params_local, x_all):
+        # params_local: [1, ...] (this stage's slice); x_all: [M, mb, ...]
+        params_local = jax.tree.map(lambda p: p[0], params_local)
+        stage = lax.axis_index(axis)
+        n_ticks = M + P - 1
+        buf = jnp.zeros_like(x_all)                 # outputs (stage P-1 only)
+        carry = jnp.zeros_like(x_all[0])            # inter-stage activation
+
+        def tick(t, state):
+            carry, buf = state
+            mb_idx = t - stage
+            # stage 0 ingests fresh microbatches; others use the carry
+            inject = jnp.where(jnp.logical_and(stage == 0, mb_idx >= 0),
+                               1, 0)
+            x_in = jnp.where(inject,
+                             x_all[jnp.clip(mb_idx, 0, M - 1)], carry)
+            active = jnp.logical_and(mb_idx >= 0, mb_idx < M)
+            y = fn(params_local, x_in)
+            y = jnp.where(active, y, x_in)
+            # last stage records its finished microbatch
+            is_last = stage == P - 1
+            buf = lax.cond(
+                jnp.logical_and(active, is_last),
+                lambda b: lax.dynamic_update_slice(
+                    b, y[None], (jnp.clip(mb_idx, 0, M - 1),) +
+                    (0,) * (b.ndim - 1)),
+                lambda b: b, buf)
+            # rotate activations to the next stage
+            carry = lax.ppermute(y, axis,
+                                 [(i, (i + 1) % P) for i in range(P)])
+            return carry, buf
+
+        _, buf = lax.fori_loop(0, n_ticks, tick, (carry, buf))
+        # only stage P-1 holds real outputs; broadcast them to all stages
+        buf = lax.psum(jnp.where(stage == P - 1, buf, jnp.zeros_like(buf)),
+                       axis)
+        return buf
+
+    spec_params = jax.tree.map(lambda _: PS(axis), stage_params)
+    return shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(spec_params, PS()),
+        out_specs=PS(),
+        check_rep=False,
+    )(stage_params, x)
+
+
+def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

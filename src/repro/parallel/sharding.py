@@ -1,0 +1,138 @@
+"""Logical-axis sharding (flax-style rules, dependency-free).
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"embed", "expert", ...).  A rules table maps logical names to mesh axes; the
+mapping differs per parallelism strategy (TP vs FSDP vs decode-SP) and is the
+main lever the §Perf hillclimb turns.
+
+Usage:
+    with mesh_context(mesh, rules):
+        y = shard(x, "batch", "seq", None)      # constraint inside jit
+        s = logical_sharding(("vocab", "embed"))  # NamedSharding for params
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+Axes = Tuple[Optional[str], ...]
+MeshAxis = Union[None, str, Tuple[str, ...]]
+LogicalRules = Dict[str, MeshAxis]
+
+_state = threading.local()
+
+# default rules: single-pod (data, model) mesh, Megatron-style TP + FSDP
+DEFAULT_RULES: LogicalRules = {
+    "batch": ("pod", "data"),     # "pod" silently dropped if mesh lacks it
+    "seq": None,
+    "seq_kv": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_cap": None,
+    "fsdp": "data",               # second param axis: ZeRO-style shard
+    "seq_res": None,              # block-boundary residual stream: map to
+                                  # "model" for Megatron sequence parallelism
+                                  # (GSPMD turns the TP all-reduce into
+                                  # reduce-scatter + all-gather)
+    "mamba_inner": "model",
+    "lstm_inner": "model",
+    "kv_lora": None,
+    "conv": None,
+    "layers": None,               # stacked-scan leading axis
+}
+
+
+def _get(name, default=None):
+    return getattr(_state, name, default)
+
+
+@contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[LogicalRules] = None):
+    old_mesh, old_rules = _get("mesh"), _get("rules")
+    _state.mesh = mesh
+    _state.rules = dict(rules) if rules is not None else dict(DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _state.mesh = old_mesh
+        _state.rules = old_rules
+
+
+@contextmanager
+def axis_rules(rules: LogicalRules):
+    """Override only the rules (mesh unchanged)."""
+    old = _get("rules")
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _get("mesh")
+
+
+def current_rules() -> LogicalRules:
+    return _get("rules") or dict(DEFAULT_RULES)
+
+
+def _mesh_axes(entry: MeshAxis, mesh: Mesh) -> MeshAxis:
+    """Drop mesh axes that don't exist (e.g. 'pod' on a single-pod mesh)."""
+    names = mesh.axis_names
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in names else None
+    kept = tuple(a for a in entry if a in names)
+    return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             rules: Optional[LogicalRules] = None,
+             mesh: Optional[Mesh] = None) -> PS:
+    """PartitionSpec for a tuple of logical axis names."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return PS()
+    used = set()
+    parts = []
+    for ax in axes:
+        entry = _mesh_axes(rules.get(ax), mesh) if ax is not None else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if entry is not None:
+            flat = (entry,) if isinstance(entry, str) else tuple(entry)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            entry = flat if len(flat) > 1 else (flat[0] if flat else None)
+        parts.append(entry)
+    return PS(*parts)
+
+
+def logical_sharding(axes: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[LogicalRules] = None) -> Optional[NamedSharding]:
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, mesh=mesh)))

@@ -1,0 +1,11 @@
+from .elastic import MeshPlan, build_mesh, plan_mesh, rescale_batch, shrink_after_failure
+from .fault import (
+    Decision,
+    FaultConfig,
+    HeartbeatMonitor,
+    NodeState,
+    RestartPolicy,
+    mitigate_stragglers,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,77 @@
+"""Elastic scaling: recompute the mesh from surviving devices and reshard.
+
+On failure, the coordinator (a) drops dead hosts, (b) picks the largest
+(data', model') grid that the survivors support while preserving the model
+axis (TP degree must divide attention heads / expert count — resharding the
+model axis would change per-op tile shapes), (c) restores the latest
+checkpoint into the new shardings (checkpoint.manager.reshard_to), and
+(d) replays the data stream from the checkpoint step (data is step-indexed).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              multi_pod: bool = False, pod_size: int = 256) -> MeshPlan:
+    """Largest mesh using <= n_devices with a fixed model axis."""
+    if n_devices < model_parallel:
+        raise ValueError("fewer devices than the model-parallel degree")
+    if multi_pod and n_devices >= 2 * pod_size:
+        pods = n_devices // pod_size
+        data = pod_size // model_parallel
+        return MeshPlan((pods, data, model_parallel),
+                        ("pod", "data", "model"))
+    data = n_devices // model_parallel
+    return MeshPlan((data, model_parallel), ("data", "model"))
+
+
+def shrink_after_failure(current: MeshPlan, lost_devices: int) -> MeshPlan:
+    """Elastic contraction: keep the model axis, shrink data (and pods)."""
+    surviving = current.n_devices - lost_devices
+    model = current.shape[-1]
+    multi = len(current.shape) == 3
+    if multi:
+        pod_size = current.shape[1] * current.shape[2]
+        if surviving >= 2 * pod_size:
+            return plan_mesh(surviving, model, multi_pod=True,
+                             pod_size=pod_size)
+    data = max(1, surviving // model)
+    return MeshPlan((data, model), ("data", "model"))
+
+
+def build_mesh(plan: MeshPlan,
+               devices: Optional[Sequence] = None) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    need = plan.n_devices
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices, have {len(devices)}")
+    import numpy as np
+    arr = np.array(devices[:need]).reshape(plan.shape)
+    return Mesh(arr, plan.axis_names)
+
+
+def rescale_batch(global_batch: int, old_data: int, new_data: int) -> int:
+    """Keep per-replica batch constant; shrink the global batch with the
+    data axis (documented alternative: keep global batch and raise
+    microbatching — see launch/train.py --keep-global-batch)."""
+    per = global_batch // old_data
+    return per * new_data

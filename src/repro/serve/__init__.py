@@ -1,0 +1,3 @@
+from .engine import EncDecEngine, Request, ServeConfig, ServeEngine
+
+__all__ = ["EncDecEngine", "Request", "ServeConfig", "ServeEngine"]

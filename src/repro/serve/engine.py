@@ -1,0 +1,128 @@
+"""Batched serving engine: prefill + decode over the model zoo.
+
+Design: requests are grouped by prompt length into batches (static batching
+with length bucketing); each group is prefilled in one batched forward that
+also populates the caches, then decoded synchronously.  The cache pytree
+(models.init_caches) is batch-synchronized — one write position per layer —
+which is exactly what the ring-buffer/SSM caches support.  Per-slot cache
+lengths (paged attention / continuous batching) are a documented §Perf
+extension, not needed for the dry-run cells.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec_apply, init_caches, lm_apply
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    cache_dtype: Any = jnp.float32
+    greedy: bool = True
+
+
+class ServeEngine:
+    """Length-bucketed batch serving for decoder-only archs."""
+
+    def __init__(self, cfg: ModelConfig, values, scfg: ServeConfig):
+        if cfg.is_encdec:
+            raise NotImplementedError("use EncDecEngine for whisper")
+        self.cfg = cfg
+        self.scfg = scfg
+        self.values = values
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+
+    def _prefill_fn(self, values, caches, tokens):
+        B, P = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(P)[None, :], (B, P))
+        logits, caches, _ = lm_apply(values, self.cfg, tokens,
+                                     positions=pos, caches=caches)
+        return logits[:, -1, :], caches
+
+    def _decode_fn(self, values, caches, tokens, positions):
+        logits, caches, _ = lm_apply(values, self.cfg, tokens,
+                                     positions=positions, caches=caches)
+        return logits[:, -1, :], caches
+
+    def _generate_group(self, group: List[Request]) -> None:
+        B = len(group)
+        P = len(group[0].prompt)
+        caches = init_caches(self.cfg, B, self.scfg.max_len,
+                             self.scfg.cache_dtype)
+        tokens = jnp.asarray(np.stack([r.prompt for r in group]), jnp.int32)
+        logits, caches = self._prefill(self.values, caches, tokens)
+        steps = max(r.max_new_tokens for r in group)
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for t in range(steps):
+            for i, r in enumerate(group):
+                if len(r.generated) < r.max_new_tokens:
+                    r.generated.append(int(cur[i]))
+            if t == steps - 1 or P + t + 1 >= self.scfg.max_len:
+                break
+            pos = jnp.full((B, 1), P + t, jnp.int32)
+            logits, caches = self._decode(self.values, caches,
+                                          cur[:, None], pos)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Length-bucketed batched generation."""
+        by_len: Dict[int, List[Request]] = {}
+        for r in requests:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        for _, reqs in sorted(by_len.items()):
+            for i in range(0, len(reqs), self.scfg.max_batch):
+                self._generate_group(reqs[i: i + self.scfg.max_batch])
+        return {r.rid: r.generated for r in requests}
+
+
+class EncDecEngine:
+    """Whisper-style: encode frames once, decode tokens against the memory."""
+
+    def __init__(self, cfg: ModelConfig, values, scfg: ServeConfig):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.scfg = scfg
+        self.values = values
+        self._step = jax.jit(self._step_fn)
+
+    def _step_fn(self, values, caches, frames, tokens, positions, enc_out):
+        logits, caches, enc_out, _ = encdec_apply(
+            values, self.cfg, frames, tokens, positions=positions,
+            caches=caches, enc_out=enc_out)
+        return logits[:, -1, :], caches, enc_out
+
+    def transcribe(self, frames: np.ndarray, bos: int = 1,
+                   max_new_tokens: int = 16) -> List[List[int]]:
+        B = frames.shape[0]
+        caches = init_caches(self.cfg, B, self.scfg.max_len,
+                             self.scfg.cache_dtype)
+        frames = jnp.asarray(frames)
+        cur = jnp.full((B, 1), bos, jnp.int32)
+        enc_out = None
+        out = [[] for _ in range(B)]
+        for t in range(max_new_tokens):
+            pos = jnp.full((B, 1), t, jnp.int32)
+            logits, caches, enc_out = self._step(self.values, caches, frames,
+                                                 cur, pos, enc_out)
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            for i in range(B):
+                out[i].append(int(cur[i, 0]))
+        return out

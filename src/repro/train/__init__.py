@@ -1,0 +1,11 @@
+from .optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    schedule_lr,
+)
+from .trainstep import make_eval_step, make_train_step
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,106 @@
+"""AdamW + gradient clipping + LR schedules, from scratch on pytrees.
+
+The optimizer state mirrors the parameter tree (so sharding specs transfer
+leaf-for-leaf), with an optional lower-precision state dtype for the largest
+models (cfg.opt_dtype, see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # int32 scalar
+    mu: Any                    # pytree like params
+    nu: Any                    # pytree like params
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"   # "bfloat16" for the 200B+ configs
+    schedule: str = "cosine"       # constant | cosine | linear_warmup_cosine
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        frac = jnp.ones(())
+    else:
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(math.pi * t))
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.zeros(())))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig,
+    no_decay: Optional[Callable[[Tuple], bool]] = None,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else jnp.ones(())
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_keys = {id(l): path for path, l in
+                 jax.tree_util.tree_flatten_with_path(params)[0]} \
+        if no_decay else {}
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim > 1 else 0.0  # no decay on norms
+        p_new = p.astype(jnp.float32) * (1 - lr * decay) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr, "clip_scale": scale}
+    return new_params, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,82 @@
+"""Baseline optimizers (paper §4.2) and the paper's relative-ordering claims."""
+
+import math
+
+import pytest
+
+from repro.core import AcceleratorConfig, CachedEvaluator, Objective
+from repro.core.baselines import (
+    dp_partition,
+    enumerate_partitions,
+    greedy_partition,
+    run_sa,
+    run_two_step,
+)
+from repro.core.ga import HWSpace
+from repro.core import partition_only
+from tests.test_partition_ga import small_graph
+
+KB = 1 << 10
+
+
+def test_enumeration_is_optimal_on_small_graph():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    obj = Objective(metric="ema", alpha=None)
+    ev = CachedEvaluator(g)
+    res = enumerate_partitions(g, acc, obj, ev=ev)
+    assert res.complete and res.groups is not None
+    # GA should match the enumeration optimum on a small graph (paper §5.2)
+    ga = partition_only(g, acc, metric="ema", sample_budget=2000,
+                        population=40, seed=0, ev=ev)
+    assert math.isclose(ga.plan.ema_total, res.plan.ema_total, rel_tol=1e-9)
+
+
+def test_greedy_runs_and_is_feasible():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    obj = Objective(metric="ema")
+    groups, plan, n_eval = greedy_partition(g, acc, obj)
+    assert plan.feasible and n_eval > 0
+    assert sum(len(s) for s in groups) == g.n
+
+
+def test_dp_respects_depth_order_constraint():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    obj = Objective(metric="ema")
+    groups, plan, _ = dp_partition(g, acc, obj)
+    assert plan.feasible
+    assert sum(len(s) for s in groups) == g.n
+
+
+def test_enumeration_not_worse_than_heuristics():
+    """Enumeration is exact: its EMA lower-bounds greedy and DP (Fig. 11)."""
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    obj = Objective(metric="ema")
+    ev = CachedEvaluator(g)
+    enum = enumerate_partitions(g, acc, obj, ev=ev)
+    _, gplan, _ = greedy_partition(g, acc, obj, ev=ev)
+    _, dplan, _ = dp_partition(g, acc, obj, ev=ev)
+    assert enum.plan.ema_total <= gplan.ema_total + 1e-9
+    assert enum.plan.ema_total <= dplan.ema_total + 1e-9
+
+
+def test_sa_runs_and_improves():
+    g = small_graph()
+    obj = Objective(metric="energy", alpha=0.002)
+    hw = HWSpace(mode="shared")
+    res = run_sa(g, obj, hw, sample_budget=400, seed=0)
+    costs = [c for _, c in res.history]
+    assert costs[-1] <= costs[0]
+    assert res.best.plan.feasible
+
+
+def test_two_step_runs():
+    g = small_graph()
+    obj = Objective(metric="energy", alpha=0.002)
+    hw = HWSpace(mode="shared")
+    res = run_two_step(g, obj, hw, sampler="random", capacity_samples=3,
+                       samples_per_capacity=150, seed=0)
+    assert res.best is not None and res.best.plan.feasible

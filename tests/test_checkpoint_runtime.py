@@ -1,0 +1,154 @@
+"""Checkpoint atomicity/retention/resume + fault-tolerance runtime."""
+
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointConfig,
+    CheckpointManager,
+    checkpoint_steps,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime import (
+    Decision,
+    FaultConfig,
+    HeartbeatMonitor,
+    MeshPlan,
+    NodeState,
+    RestartPolicy,
+    mitigate_stragglers,
+    plan_mesh,
+    rescale_batch,
+    shrink_after_failure,
+)
+
+
+def tree():
+    return {"a": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "b": np.ones(5, np.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, tree())
+    restored, meta = load_checkpoint(d, template=tree())
+    np.testing.assert_array_equal(restored["a"]["w"], tree()["a"]["w"])
+    assert meta["step"] == 10
+
+
+def test_uncommitted_checkpoints_ignored(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, tree())
+    # simulate a crash mid-save: committed marker missing
+    broken = os.path.join(d, "step_00000002")
+    shutil.copytree(os.path.join(d, "step_00000001"), broken)
+    os.remove(os.path.join(broken, "_COMMITTED"))
+    assert checkpoint_steps(d) == [1]
+    _, meta = load_checkpoint(d)
+    assert meta["step"] == 1
+
+
+def test_corruption_detected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, tree())
+    path = os.path.join(d, "step_00000005", "arrays_0.npz")
+    with open(path, "r+b") as f:
+        f.seek(30)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(IOError):
+        load_checkpoint(d, verify=True, template=tree())
+
+
+def test_manager_retention_and_resume(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(
+        directory=str(tmp_path), save_every=2, keep_last=2, async_save=False))
+    for step in range(1, 9):
+        if mgr.should_save(step):
+            mgr.save(step, {"x": np.full(3, step, np.float32)})
+    assert checkpoint_steps(str(tmp_path)) == [6, 8]
+    restored, meta = mgr.restore({"x": np.zeros(3, np.float32)})
+    assert meta["step"] == 8
+    np.testing.assert_array_equal(restored["x"], [8, 8, 8])
+
+
+def test_async_save_waits(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             async_save=True))
+    mgr.save(4, tree())
+    mgr.wait()
+    assert checkpoint_steps(str(tmp_path)) == [4]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_dead_and_straggler():
+    clock = FakeClock()
+    cfg = FaultConfig(heartbeat_interval_s=1.0, dead_after_missed=3,
+                      straggler_factor=2.0)
+    mon = HeartbeatMonitor(cfg, ["n0", "n1", "n2"], clock=clock)
+    for t in range(10):
+        clock.t = float(t)
+        mon.heartbeat("n0", step_time_s=1.0)
+        mon.heartbeat("n1", step_time_s=5.0)  # slow
+        # n2 silent after t=2
+        if t <= 2:
+            mon.heartbeat("n2", step_time_s=1.0)
+    states = mon.survey()
+    assert states["n0"] == NodeState.HEALTHY
+    assert states["n1"] == NodeState.SLOW
+    assert states["n2"] == NodeState.DEAD
+
+
+def test_restart_policy_budget():
+    clock = FakeClock()
+    cfg = FaultConfig(max_restarts_per_hour=2)
+    mon = HeartbeatMonitor(cfg, ["n0"], clock=clock)
+    pol = RestartPolicy(cfg, clock=clock)
+    assert pol.decide(mon, step_failed=False) == Decision.CONTINUE
+    assert pol.decide(mon, step_failed=True) == Decision.RESTART_SAME
+    assert pol.decide(mon, step_failed=True) == Decision.RESTART_SAME
+    assert pol.decide(mon, step_failed=True) == Decision.HALT
+    clock.t += 3601
+    mon.heartbeat("n0")  # node is alive; only the budget window moved
+    assert pol.decide(mon, step_failed=True) == Decision.RESTART_SAME
+
+
+def test_straggler_mitigation_rebalances():
+    clock = FakeClock()
+    cfg = FaultConfig(straggler_factor=2.0)
+    mon = HeartbeatMonitor(cfg, ["a", "b"], clock=clock)
+    for _ in range(5):
+        mon.heartbeat("a", 1.0)
+        mon.heartbeat("b", 10.0)
+    new = mitigate_stragglers(mon, {"a": 4, "b": 4})
+    assert new == {"a": 5, "b": 3}
+
+
+def test_elastic_mesh_planning():
+    plan = plan_mesh(512, model_parallel=16, multi_pod=True, pod_size=256)
+    assert plan.shape == (2, 16, 16)
+    assert plan.axis_names == ("pod", "data", "model")
+    single = plan_mesh(256, model_parallel=16)
+    assert single.shape == (16, 16)
+    # lose 17 devices from the single pod: data axis shrinks, model kept
+    shrunk = shrink_after_failure(single, lost_devices=17)
+    assert shrunk.shape == (14, 16)
+    assert rescale_batch(256, old_data=16, new_data=14) == 224
+    # lose a whole pod from the multi-pod mesh
+    shrunk2 = shrink_after_failure(plan, lost_devices=256)
+    assert shrunk2.shape == (16, 16)

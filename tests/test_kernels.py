@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per deliverable (c): sweep shapes/dtypes per kernel and assert_allclose
+against ref.py, plus hypothesis property tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import flash_attention, fused_rmsnorm, fused_swiglu
+from repro.kernels import ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SWEEP = [
+    # (B, H, S, d, causal, window, block_q, block_k)
+    (1, 2, 128, 64, True, 0, 64, 64),
+    (2, 1, 256, 32, True, 0, 128, 64),
+    (1, 2, 128, 64, False, 0, 64, 128),
+    (1, 1, 256, 64, True, 64, 64, 64),      # sliding window
+    (1, 2, 128, 128, True, 32, 32, 32),
+    (2, 2, 64, 16, True, 0, 64, 64),        # single block
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", ATTN_SWEEP)
+def test_flash_attention_matches_ref(case, dtype):
+    B, H, S, d, causal, window, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q, k, v = (rand(kk, (B, H, S, d), dtype) for kk in ks)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([32, 64]),
+       st.booleans(), st.sampled_from([0, 32, 128]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(S, d, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(S * d + window), 3)
+    q, k, v = (rand(kk, (1, 2, S, d), jnp.float32) for kk in ks)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_blocks_do_not_change_result():
+    """Block-size invariance: the tiling is numerically irrelevant."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(kk, (1, 1, 256, 64), jnp.float32) for kk in ks)
+    a = flash_attention(q, k, v, block_q=32, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused SwiGLU
+# ---------------------------------------------------------------------------
+
+FFN_SWEEP = [
+    # (M, d, f, block_m, block_f)
+    (128, 64, 256, 64, 128),
+    (256, 128, 512, 128, 512),
+    (64, 32, 64, 64, 64),
+    (512, 64, 128, 256, 64),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", FFN_SWEEP)
+def test_fused_swiglu_matches_ref(case, dtype):
+    M, d, f, bm, bf = case
+    ks = jax.random.split(jax.random.PRNGKey(M + f), 4)
+    x = rand(ks[0], (M, d), dtype)
+    wg = rand(ks[1], (d, f), dtype) / np.sqrt(d)
+    wi = rand(ks[2], (d, f), dtype) / np.sqrt(d)
+    wo = rand(ks[3], (f, d), dtype) / np.sqrt(f)
+    got = fused_swiglu(x, wg, wi, wo, block_m=bm, block_f=bf, interpret=True)
+    want = ref.swiglu_ref(x, wg, wi, wo)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@given(st.sampled_from([64, 128]), st.sampled_from([32, 64]),
+       st.sampled_from([64, 128, 256]))
+@settings(max_examples=10, deadline=None)
+def test_fused_swiglu_property(M, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(M * d + f), 4)
+    x = rand(ks[0], (M, d), jnp.float32)
+    wg = rand(ks[1], (d, f), jnp.float32) / np.sqrt(d)
+    wi = rand(ks[2], (d, f), jnp.float32) / np.sqrt(d)
+    wo = rand(ks[3], (f, d), jnp.float32) / np.sqrt(f)
+    got = fused_swiglu(x, wg, wi, wo, block_m=64, block_f=64, interpret=True)
+    want = ref.swiglu_ref(x, wg, wi, wo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64, 64), (256, 128), (128, 512)])
+def test_fused_rmsnorm_matches_ref(shape, dtype):
+    M, d = shape
+    ks = jax.random.split(jax.random.PRNGKey(M + d), 2)
+    x = rand(ks[0], (M, d), dtype)
+    scale = rand(ks[1], (d,), jnp.float32)
+    got = fused_rmsnorm(x, scale, block_m=64, interpret=True)
+    want = ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_rmsnorm_scale_invariance_property():
+    """rmsnorm(c*x) == rmsnorm(x) for any c > 0 (up to eps)."""
+    x = rand(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    s = jnp.ones(128)
+    a = fused_rmsnorm(x, s, interpret=True)
+    b = fused_rmsnorm(37.0 * x, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)

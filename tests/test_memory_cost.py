@@ -1,0 +1,114 @@
+"""Memory manager (paper §3.2) and accelerator cost model (paper §5.1.2)."""
+
+import pytest
+
+from repro.core import (
+    AcceleratorConfig,
+    CachedEvaluator,
+    Graph,
+    RegionTable,
+    build_region_table,
+    evaluate_partition,
+    evaluate_subgraph,
+    subgraph_footprint,
+)
+from repro.core.netlib import resnet50, vgg16
+from tests.test_simulate import chain_graph
+
+MB = 1 << 20
+KB = 1 << 10
+
+
+def test_region_table_allocation_and_overhead():
+    t = RegionTable(capacity_bytes=1 * MB, max_regions=64)
+    r1 = t.allocate(0, 1000)
+    r2 = t.allocate(1, 2000)
+    assert r1.end == r2.start and t.used_bytes == 3000
+    # paper: 272-byte table, ~0.18% area for a 1MB buffer with N=64
+    assert t.table_bytes() <= 400
+    assert t.area_overhead_fraction() < 0.005
+
+
+def test_region_table_overflow_raises():
+    t = RegionTable(capacity_bytes=4096, max_regions=4)
+    t.allocate(0, 4000)
+    with pytest.raises(MemoryError):
+        t.allocate(1, 200)
+
+
+def test_build_region_table_chain():
+    g, nodes = chain_graph()
+    t = build_region_table(g, nodes, capacity_bytes=64 * KB)
+    assert len(t.regions) == len(nodes) + 1  # internal + external input
+    assert t.used_bytes <= 64 * KB
+
+
+def test_footprint_matches_schedule():
+    g, nodes = chain_graph()
+    fp = subgraph_footprint(g, nodes)
+    from repro.core import derive_schedule
+    sched = derive_schedule(g, nodes)
+    assert fp.total_bytes == sum(
+        ts.x * g.nodes[t].line_bytes for t, ts in sched.tensors.items()
+    )
+
+
+def test_fusion_reduces_ema():
+    """The heart of Fig. 1/Fig. 3: fusing a chain removes the intermediate
+    round trips."""
+    g, nodes = chain_graph()
+    acc = AcceleratorConfig()
+    singletons = [{v} for v in sorted(nodes)]
+    fused = [set(nodes)]
+    p1 = evaluate_partition(g, singletons, acc)
+    p2 = evaluate_partition(g, fused, acc)
+    assert p2.feasible
+    assert p2.ema_total < p1.ema_total
+
+
+def test_infeasible_when_buffer_too_small():
+    g, nodes = chain_graph(length=4096)
+    acc = AcceleratorConfig(glb_bytes=2)  # pathological
+    c = evaluate_subgraph(g, nodes, acc)
+    assert not c.feasible
+
+
+def test_single_layer_streams_weights():
+    """A single layer whose activations exceed the buffer re-streams weights
+    per row block instead of becoming infeasible."""
+    g = Graph("big")
+    i = g.add_node("in", 1024, 4096)
+    v = g.add_node("fc", 1024, 4096, weight_bytes=8 * MB, macs=10**9)
+    g.add_edge(i, v, F=1, s=1)
+    g.nodes[v].is_output = True
+    acc = AcceleratorConfig(glb_bytes=4 * KB)
+    c = evaluate_subgraph(g, {v}, acc)
+    assert c.feasible
+    assert c.ema_w >= 8 * MB  # streamed at least once
+
+
+def test_latency_is_max_of_compute_and_io():
+    g, nodes = chain_graph()
+    acc = AcceleratorConfig()
+    c = evaluate_subgraph(g, nodes, acc)
+    assert c.latency_cycles(acc) == max(c.compute_cycles(acc), c.io_cycles(acc))
+
+
+def test_cached_evaluator_consistency():
+    g = resnet50()
+    acc = AcceleratorConfig()
+    ev = CachedEvaluator(g)
+    s = set(range(1, 5))
+    a = ev.subgraph(s, acc)
+    b = ev.subgraph(s, acc)
+    assert a is b and ev.evaluations == 1
+    direct = evaluate_subgraph(g, s, acc)
+    assert direct.ema_total == a.ema_total
+
+
+def test_known_model_statistics():
+    """Sanity: VGG16 ~138M weights, ResNet50 ~25.5M (INT8 bytes)."""
+    v = vgg16()
+    r = resnet50()
+    assert 130e6 < v.total_weight_bytes() < 145e6
+    assert 23e6 < r.total_weight_bytes() < 28e6

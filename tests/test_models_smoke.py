@@ -1,0 +1,149 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+asserting output shapes and no NaNs (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (
+    encdec_apply,
+    init_caches,
+    lm_apply,
+    lm_init,
+    lm_loss,
+    param_values,
+)
+
+B, S = 2, 32
+
+
+def make_batch(cfg, key):
+    kt, ke = jax.random.split(key)
+    tokens = jax.random.randint(kt, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(ke, (B, 16, cfg.d_model))
+    elif cfg.frontend != "none":
+        batch["extra_embeds"] = jax.random.normal(
+            ke, (B, cfg.n_frontend_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch, smoke=True)
+            key = jax.random.PRNGKey(0)
+            params = lm_init(key, cfg)
+            cache[arch] = (cfg, param_values(params))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(built, arch):
+    cfg, values = built(arch)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    if cfg.is_encdec:
+        logits, _, enc_out, _ = encdec_apply(values, cfg, batch["frames"],
+                                             batch["tokens"])
+        assert enc_out.shape == (B, 16, cfg.d_model)
+    else:
+        logits, _, _ = lm_apply(values, cfg, batch["tokens"],
+                                extra_embeds=batch.get("extra_embeds"))
+        s_extra = 0 if "extra_embeds" not in batch else cfg.n_frontend_tokens
+        assert logits.shape == (B, S + s_extra, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss(built, arch):
+    """One SGD step on a fixed batch must reduce the loss (gradients flow)."""
+    cfg, values = built(arch)
+    batch = make_batch(cfg, jax.random.PRNGKey(2))
+
+    def loss_fn(v):
+        return lm_loss(v, cfg, batch)[0]
+
+    loss0, grads = jax.value_and_grad(loss_fn)(values)
+    assert bool(jnp.isfinite(loss0)), arch
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), grads, 0.0)
+    assert bool(gnorm > 0), f"{arch}: zero gradients"
+    lr = 1e-2 / np.sqrt(float(gnorm) + 1e-9)
+    stepped = jax.tree.map(lambda v, g: v - lr * g.astype(v.dtype),
+                           values, grads)
+    loss1 = loss_fn(stepped)
+    assert bool(jnp.isfinite(loss1)), arch
+    assert float(loss1) < float(loss0) + 1e-3, (
+        f"{arch}: loss {loss0} -> {loss1}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(built, arch):
+    """Token-by-token decode with caches must agree with the full forward."""
+    cfg, values = built(arch)
+    if cfg.is_encdec:
+        pytest.skip("enc-dec decode covered in test_serve")
+    if cfg.n_experts:
+        # MoE capacity dropping differs between 32-token prefill and 1-token
+        # decode steps (expected); raise capacity so no tokens drop and the
+        # equivalence is exact.
+        cfg = cfg.with_(capacity_factor=float(cfg.n_experts))
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full_logits, _, _ = lm_apply(values, cfg, tokens)
+
+    caches = init_caches(cfg, B, max_len=S + 4, dtype=jnp.float32)
+
+    @jax.jit
+    def decode(values, caches, tok, pos):
+        lg, caches, _ = lm_apply(values, cfg, tok, positions=pos,
+                                 caches=caches)
+        return lg, caches
+
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        lg, caches = decode(values, caches, tokens[:, t: t + 1], pos)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=2e-2, atol=2e-3,
+    )
+
+
+def test_param_counts_match_assignment_scale():
+    """Full configs land in the advertised parameter ranges."""
+    expect = {
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "glm4-9b": (8e9, 10.5e9),
+        "gemma3-4b": (3e9, 5e9),
+        "granite-3-8b": (7e9, 9.5e9),
+        "xlstm-350m": (0.25e9, 0.55e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "arctic-480b": (420e9, 520e9),
+        "llava-next-34b": (30e9, 38e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_layout_periods_are_small():
+    """Scan layout keeps unrolled HLO small for every arch."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        pre, p, reps, rem = cfg.layout()
+        assert pre + p + rem <= 12, (arch, cfg.layout())
+        assert pre + p * reps + rem == cfg.n_layers

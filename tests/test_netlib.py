@@ -1,0 +1,54 @@
+"""Paper workload graphs: structure, statistics, schedulability."""
+
+import pytest
+
+from repro.core import AcceleratorConfig, CachedEvaluator
+from repro.core.netlib import PAPER_MODELS, build
+from repro.core.partition import is_valid, partition_of, singleton_partition
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+def test_graph_wellformed(name):
+    g = build(name)
+    assert g.n > 5
+    for e in g.edges:
+        assert e.src < e.dst
+    # exactly one model input (the virtual source), >=1 output
+    assert len(g.sources()) >= 1
+    assert any(v.is_output for v in g.nodes)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_MODELS))
+def test_singleton_plan_always_feasible(name):
+    g = build(name)
+    acc = AcceleratorConfig()
+    ev = CachedEvaluator(g)
+    plan = ev.plan(singleton_partition(g), acc)
+    assert plan.feasible, [
+        (s.nodes, s.reason) for s in plan.subgraphs if not s.feasible
+    ]
+    assert plan.ema_total > 0
+
+
+def test_model_scale_ordering():
+    """ResNet152 > ResNet50 in MACs; GPT > Transformer in weights."""
+    r50, r152 = build("resnet50"), build("resnet152")
+    tr, gp = build("transformer"), build("gpt")
+    assert r152.total_macs() > r50.total_macs()
+    assert gp.total_weight_bytes() > tr.total_weight_bytes()
+
+
+def test_randwire_is_irregular_and_seeded():
+    a1, a2 = build("randwire_a"), build("randwire_a")
+    assert a1.n == a2.n and len(a1.edges) == len(a2.edges)  # deterministic
+    b = build("randwire_b")
+    # multi-input merge nodes exist (irregular wiring)
+    multi = [v for v in range(a1.n) if len(a1.in_edges(v)) > 2]
+    assert multi
+    assert b.n != a1.n or b.total_weight_bytes() != a1.total_weight_bytes()
+
+
+def test_large_models_have_enough_nodes_for_search():
+    for name in ("transformer", "gpt", "randwire_a", "randwire_b", "nasnet"):
+        g = build(name)
+        assert g.n >= 50, (name, g.n)

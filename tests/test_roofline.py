@@ -1,0 +1,95 @@
+"""Roofline machinery: HLO collective parsing, XLA scan-once behaviour
+(the documented basis for the trip-count correction), report math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import roofline
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[16,512]{1,0} parameter(0)
+  %ar = bf16[16,512]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[64,128]{1,0} all-gather(%p0), dimensions={0}
+  %rs = bf16[8,512]{1,0} reduce-scatter(%ar), dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(%ag), source_target_pairs={{0,1}}
+  %a2a = bf16[2,2]{1,0} all-to-all(%rs), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_finds_all_kinds():
+    total, per = roofline.collective_bytes(HLO_SAMPLE)
+    assert set(per) == {"all-reduce", "all-gather", "reduce-scatter",
+                        "collective-permute", "all-to-all"}
+    # all-reduce is wire-weighted 2x
+    assert per["all-reduce"] == 2 * 16 * 512 * 2
+    assert per["all-gather"] == 64 * 128 * 4
+    assert per["reduce-scatter"] == 8 * 512 * 2
+    assert total == sum(per.values())
+
+
+def test_parser_ignores_non_collectives():
+    text = "%d = f32[128,128]{1,0} dot(%a, %b)"
+    total, per = roofline.collective_bytes(text)
+    assert total == 0 and per == {}
+
+
+def test_xla_counts_scan_body_once():
+    """The premise of the trip-count correction: module-level cost analysis
+    does not multiply while-loop bodies by trip count."""
+    w = jnp.ones((64, 64))
+
+    def loop(n):
+        def f(x):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y
+        return jax.jit(f).lower(jnp.ones((64, 64))).compile()
+
+    ca2 = loop(2).cost_analysis()
+    ca8 = loop(8).cost_analysis()
+    if isinstance(ca2, list):
+        ca2, ca8 = ca2[0], ca8[0]
+    f2, f8 = ca2.get("flops", 0), ca8.get("flops", 0)
+    assert f2 == f8, "XLA now multiplies trip counts: drop scan_correction"
+
+
+def test_scan_correction_positive_for_scanned_arch():
+    cfg = get_config("glm4-9b")
+    xf, xb = roofline.scan_correction(cfg, "train", 4096, 256, 256)
+    assert xf > 0 and xb > 0
+    pre, p, reps, rem = cfg.layout()
+    # correction carries (reps-1) bodies: at least that multiple of one body
+    one_layer = roofline.layer_flops(cfg, pre, 4096 * 256, 2048, "train") / 256
+    assert xf == pytest.approx((reps - 1) * one_layer, rel=1e-6)
+
+
+def test_report_terms_and_bottleneck():
+    rep = roofline.RooflineReport(
+        arch="a", shape="s", mesh="m", n_devices=256,
+        hlo_flops=197e12 * 0.1,         # 100 ms of compute? no: 0.1 s
+        hlo_bytes=819e9 * 0.01,
+        coll_bytes=50e9 * 0.002,
+        model_flops=197e12 * 0.05 * 256,
+    )
+    assert rep.t_compute == pytest.approx(0.1)
+    assert rep.t_memory == pytest.approx(0.01)
+    assert rep.t_collective == pytest.approx(0.002)
+    assert rep.bottleneck == "compute"
+    assert rep.roofline_fraction == pytest.approx(0.5)
+    assert rep.flops_utilization == pytest.approx(0.5)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    full = cfg.param_count()
+    active = cfg.active_param_count()
+    assert active < full / 3
+    mf = roofline.model_flops_for(cfg, "train", 4096, 256)
+    assert mf == pytest.approx(6.0 * active * 4096 * 256)

@@ -1,0 +1,89 @@
+"""Logical-axis sharding rules + mesh planning (single process, no devices
+locked — specs only; multi-device execution covered by test_multidevice)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.configs import get_config
+from repro.launch.mesh import rules_for
+from repro.models import cache_axes, init_caches, is_param, lm_init
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    mesh_context,
+    spec_for,
+)
+
+
+def fake_mesh(shape=(2, 2), names=("data", "model")):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, names)
+
+
+def test_spec_resolution_and_pod_dropping():
+    mesh = fake_mesh()
+    spec = spec_for(("batch", None, "heads"), DEFAULT_RULES, mesh)
+    # 'pod' doesn't exist on this mesh -> dropped from the batch entry
+    assert spec == PS("data", None, "model")
+
+
+def test_duplicate_mesh_axis_suppressed():
+    mesh = fake_mesh()
+    spec = spec_for(("heads", "ff"), DEFAULT_RULES, mesh)  # both -> model
+    assert spec == PS("model", None)
+
+
+def test_multi_pod_batch_spec():
+    mesh = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = spec_for(("batch", "seq"), DEFAULT_RULES, mesh)
+    assert spec == PS(("pod", "data"), None)
+
+
+def test_rules_disable_unshardable_axes():
+    cfg = get_config("xlstm-350m")  # 4 heads: cannot shard 16 ways
+    rules = rules_for(cfg, "train")
+    assert rules["heads"] is None
+    assert rules["kv_heads"] is None
+    cfg2 = get_config("glm4-9b")    # 2 kv heads
+    rules2 = rules_for(cfg2, "train")
+    assert rules2["kv_heads"] is None
+    assert rules2["heads"] == "model"
+
+
+def test_decode_rules_shard_cache_sequence():
+    cfg = get_config("glm4-9b")
+    rules = rules_for(cfg, "decode")
+    assert rules["seq_kv"] == "model"
+    long_rules = rules_for(cfg, "decode_long")
+    assert long_rules["seq_kv"] == ("data", "model")
+    assert long_rules["batch"] is None
+
+
+def test_param_axes_align_with_tree():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    ptree = jax.eval_shape(lambda: lm_init(jax.random.PRNGKey(0), cfg))
+    leaves = [p for p in jax.tree_util.tree_leaves(
+        ptree, is_leaf=is_param) if is_param(p)]
+    assert leaves, "eval_shape should preserve Param nodes"
+    for p in leaves:
+        assert len(p.axes) == len(p.value.shape), (p.axes, p.value.shape)
+
+
+def test_cache_axes_structure_matches_caches():
+    import jax.numpy as jnp
+    for arch in ("glm4-9b", "deepseek-v2-236b", "jamba-v0.1-52b",
+                 "xlstm-350m", "gemma3-4b"):
+        cfg = get_config(arch, smoke=True)
+        caches = jax.eval_shape(lambda c=cfg: init_caches(c, 2, 64,
+                                                          jnp.float32))
+        axes = cache_axes(cfg)
+        cl = jax.tree_util.tree_structure(caches)
+        al = jax.tree_util.tree_structure(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        assert cl == al, arch
+        flat_c = jax.tree_util.tree_leaves(caches)
+        flat_a = jax.tree_util.tree_leaves(
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+        for c, a in zip(flat_c, flat_a):
+            assert len(a) == len(c.shape), (arch, a, c.shape)

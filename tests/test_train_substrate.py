@@ -1,0 +1,109 @@
+"""Optimizer, train step, microbatching, data pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, PrefetchingLoader, SyntheticLM
+from repro.models import lm_init, param_values
+from repro.train import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    make_train_step,
+    schedule_lr,
+)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    cfg = AdamWConfig(lr=0.3, weight_decay=0.0, clip_norm=0.0,
+                      schedule="constant")
+    state = adamw_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.array([1.0, 2.0, -1.0])))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               [1.0, 2.0, -1.0], atol=1e-2)
+
+
+def test_clip_norm_limits_update():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                      schedule="constant")
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw_update(g, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    assert float(metrics["clip_scale"]) == pytest.approx(1 / 200.0)
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      schedule="cosine", min_lr_frac=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1.0)
+    assert lrs[100] == pytest.approx(0.1, abs=1e-6)
+    assert all(b <= a + 1e-9 for a, b in zip(lrs[10:], lrs[11:]))
+
+
+def test_train_step_reduces_loss_over_steps():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    values = param_values(lm_init(jax.random.PRNGKey(0), cfg))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                          schedule="cosine")
+    opt = adamw_init(values, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                  global_batch=8, seed=0))
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        values, opt, metrics = step(values, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::8]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    values = param_values(lm_init(jax.random.PRNGKey(0), cfg))
+    opt_cfg = AdamWConfig(lr=1e-3, schedule="constant", warmup_steps=0)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                  global_batch=8, seed=1))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    s1 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=1))
+    s4 = jax.jit(make_train_step(cfg, opt_cfg, microbatches=4))
+    p1, _, _ = s1(values, adamw_init(values, opt_cfg), batch)
+    p4, _, _ = s4(values, adamw_init(values, opt_cfg), batch)
+    # microbatch mean-of-grads == full-batch grad only if every microbatch
+    # has identical token counts (true here); updates must agree closely
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-3
+
+
+def test_synthetic_data_is_deterministic_and_learnable():
+    cfg = DataConfig(vocab=97, seq_len=64, global_batch=4, seed=7)
+    a = SyntheticLM(cfg).batch_at(3)
+    b = SyntheticLM(cfg).batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(cfg).batch_at(4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_prefetching_loader_replays_stream():
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=2, seed=3)
+    src = SyntheticLM(cfg)
+    loader = PrefetchingLoader(src, start_step=0)
+    first = next(loader)
+    loader.close()
+    np.testing.assert_array_equal(first["tokens"], src.batch_at(0)["tokens"])
