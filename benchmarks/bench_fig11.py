@@ -1,14 +1,24 @@
 """Paper Fig. 11: graph-partition quality (EMA-opt): Cocco vs Halide-greedy,
 Irregular-NN DP, and exact enumeration (small models only), normalized to
 greedy.  Claims validated: Cocco matches the enumeration optimum on small
-models and beats greedy/DP on the large irregular ones."""
+models and beats greedy/DP on the large irregular ones.
+
+All methods run through the unified exploration API (one ExploreSpec per
+model, one shared CachedEvaluator, strategies from the registry)."""
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Dict
 
-from repro.core import AcceleratorConfig, CachedEvaluator, Objective, partition_only
-from repro.core.baselines import dp_partition, enumerate_partitions, greedy_partition
+from repro.api import (
+    EnumOptions,
+    ExploreSpec,
+    GAOptions,
+    GreedyOptions,
+    run,
+)
+from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import (
@@ -27,52 +37,60 @@ ENUM_MODELS = {"vgg16", "resnet50", "googlenet", "nasnet"}
 
 def run_model(name: str, samples: int) -> Dict:
     g = build(name)
-    acc = AcceleratorConfig()
-    obj = Objective(metric="ema", alpha=None)
     ev = CachedEvaluator(g)
+    base = ExploreSpec(
+        workload=name,
+        objective=Objective(metric="ema", alpha=None),
+        hw=HWSpace(mode="fixed", base=AcceleratorConfig()),
+        sample_budget=samples,
+        seed=0,
+    )
     out: Dict[str, Dict] = {}
 
-    ggroups, gplan, _ = greedy_partition(g, acc, obj, ev=ev,
-                                         eval_budget=GREEDY_EVALS)
-    out["greedy"] = {"ema": gplan.ema_total, "bw": gplan.avg_bandwidth()}
+    greedy = run(replace(base, strategy="greedy",
+                         options=GreedyOptions(eval_budget=GREEDY_EVALS)),
+                 graph=g, ev=ev)
+    out["greedy"] = {"ema": greedy.plan.ema_total,
+                     "bw": greedy.plan.avg_bandwidth()}
 
-    dgroups, dplan, _ = dp_partition(g, acc, obj, ev=ev)
-    out["dp"] = {"ema": dplan.ema_total, "bw": dplan.avg_bandwidth()}
+    dp = run(replace(base, strategy="dp", options=None), graph=g, ev=ev)
+    out["dp"] = {"ema": dp.plan.ema_total, "bw": dp.plan.avg_bandwidth()}
 
     if name in ENUM_MODELS:
-        er = enumerate_partitions(g, acc, obj, ev=ev,
-                                  state_budget=ENUM_STATES)
-        if er.complete and er.plan is not None:
+        er = run(replace(base, strategy="enum",
+                         options=EnumOptions(state_budget=ENUM_STATES)),
+                 graph=g, ev=ev)
+        if er.meta["complete"] and er.plan is not None:
             out["enum"] = {"ema": er.plan.ema_total,
                            "bw": er.plan.avg_bandwidth()}
         else:
             out["enum"] = {"ema": None, "bw": None,
-                           "note": f"budget exceeded ({er.states} states)"}
+                           "note": f"budget exceeded ({er.meta['states']} states)"}
 
     # paper §4.3 benefit 4 — "flexible initialization": seed the GA with the
     # other optimizers' results and finetune (guarantees Cocco >= baselines
     # even at reduced sample budgets; random-only init needs the paper's
     # 400k-sample budget to dominate on the 200+-node irregular graphs)
-    res = partition_only(g, acc, metric="ema", sample_budget=samples,
-                         population=POPULATION, seed=0, ev=ev,
-                         init_groups=[dgroups, ggroups])
-    out["cocco"] = {"ema": res.plan.ema_total,
-                    "bw": res.plan.avg_bandwidth(),
-                    "subgraphs": res.n_subgraphs}
-    base = out["greedy"]["ema"]
+    cocco = run(replace(base, strategy="ga",
+                        options=GAOptions(population=POPULATION)),
+                graph=g, ev=ev, init_groups=[dp.groups, greedy.groups])
+    out["cocco"] = {"ema": cocco.plan.ema_total,
+                    "bw": cocco.plan.avg_bandwidth(),
+                    "subgraphs": cocco.n_subgraphs}
+    base_ema = out["greedy"]["ema"]
     for k in out:
         if out[k].get("ema"):
-            out[k]["ema_norm"] = out[k]["ema"] / base
+            out[k]["ema_norm"] = out[k]["ema"] / base_ema
     return out
 
 
-def run(samples: int = PARTITION_SAMPLES) -> Dict:
+def run_all(samples: int = PARTITION_SAMPLES) -> Dict:
     return {name: run_model(name, samples)
             for name in SMALL_MODELS + LARGE_MODELS}
 
 
 def main() -> None:
-    res = run()
+    res = run_all()
     for name, methods in res.items():
         t = Timer()
         parts = []

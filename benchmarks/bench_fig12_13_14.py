@@ -1,15 +1,18 @@
 """Paper Fig. 12 (sample-efficiency curves), Fig. 13 (population
-distribution over generations), Fig. 14 (alpha sweep: capacity vs energy)."""
+distribution over generations), Fig. 14 (alpha sweep: capacity vs energy).
+
+Cocco, SA, and the two-step schemes all run as registry strategies on one
+shared-buffer ExploreSpec per model."""
 
 from __future__ import annotations
 
 import json
 import os
+from dataclasses import replace
 from typing import Dict, List
 
-from repro.core import CachedEvaluator, Objective, co_explore
-from repro.core.baselines import run_sa, run_two_step
-from repro.core.ga import HWSpace
+from repro.api import ExploreSpec, GAOptions, TwoStepOptions, run
+from repro.core import HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import COOPT_SAMPLES, POPULATION, Timer, emit
@@ -26,33 +29,43 @@ def downsample(history: List, n: int = 200) -> List:
     return [list(history[int(i * step)]) for i in range(n)]
 
 
+def coopt_spec(name: str, samples: int, alpha: float = 0.002) -> ExploreSpec:
+    return ExploreSpec(
+        workload=name,
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=alpha),
+        hw=HWSpace(mode="shared"),
+        sample_budget=samples,
+        seed=0,
+        options=GAOptions(population=POPULATION),
+    )
+
+
 def run_fig12(samples: int = COOPT_SAMPLES) -> Dict:
     out = {}
     for name in FIG12_MODELS:
         g = build(name)
-        obj = Objective(metric="energy", alpha=0.002)
-        hw = HWSpace(mode="shared")
+        spec = coopt_spec(name, samples)
         curves = {}
-        res = co_explore(g, mode="shared", alpha=0.002,
-                         sample_budget=samples, population=POPULATION,
-                         seed=0)
-        curves["cocco"] = downsample(res.history)
-        sa = run_sa(g, obj, hw, sample_budget=samples, seed=0)
-        curves["sa"] = downsample(sa.history)
+        curves["cocco"] = downsample(run(spec, graph=g).history)
+        curves["sa"] = downsample(
+            run(replace(spec, strategy="sa", options=None), graph=g).history)
         for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
-            ts = run_two_step(g, obj, hw, sampler=sampler,
-                              capacity_samples=4,
-                              samples_per_capacity=max(samples // 4, 500),
-                              seed=0)
+            ts = run(replace(spec, strategy="two_step",
+                             options=TwoStepOptions(
+                                 sampler=sampler, capacity_samples=4,
+                                 samples_per_capacity=max(samples // 4, 500))),
+                     graph=g)
             curves[tag] = downsample(ts.history)
         out[name] = curves
     return out
 
 
 def run_fig13(samples: int = COOPT_SAMPLES) -> Dict:
-    g = build("resnet50")
-    res = co_explore(g, mode="shared", alpha=0.002, sample_budget=samples,
-                     population=POPULATION, seed=0, log_populations=True)
+    spec = replace(coopt_spec("resnet50", samples),
+                   options=GAOptions(population=POPULATION,
+                                     log_populations=True))
+    res = run(spec)
     return {"resnet50": [[list(p) for p in gen]
                          for gen in res.population_log[:20]]}
 
@@ -63,9 +76,8 @@ def run_fig14(samples: int = COOPT_SAMPLES) -> Dict:
         g = build(name)
         rows = []
         for alpha in ALPHAS:
-            res = co_explore(g, mode="shared", alpha=alpha,
-                             sample_budget=max(samples // 2, 1000),
-                             population=POPULATION, seed=0)
+            res = run(coopt_spec(name, max(samples // 2, 1000), alpha=alpha),
+                      graph=g)
             rows.append({"alpha": alpha,
                          "capacity_kb": res.acc.glb_bytes // 1024,
                          "energy_pj": res.plan.energy_pj})

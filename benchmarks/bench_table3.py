@@ -7,10 +7,10 @@ with batch, (d) energy per batch amortizes weight traffic."""
 
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Dict
 
-from repro.core import AcceleratorConfig, co_explore
+from repro.api import ExploreSpec, GAOptions, run
+from repro.core import AcceleratorConfig, HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
@@ -41,7 +41,7 @@ def table3_metrics(plan, acc: AcceleratorConfig, n: int, b: int) -> Dict:
             "latency_ms": lat_cycles / acc.freq_hz * 1e3}
 
 
-def run(samples: int = COOPT_SAMPLES) -> Dict:
+def run_all(samples: int = COOPT_SAMPLES) -> Dict:
     out = {}
     for name in COOPT_MODELS:
         g = build(name)
@@ -49,10 +49,16 @@ def run(samples: int = COOPT_SAMPLES) -> Dict:
         for n in CORES:
             base = AcceleratorConfig(shared=True, weight_share_cores=n,
                                      n_cores=n)
-            res = co_explore(g, mode="shared", metric="energy", alpha=0.002,
-                             base=base,
-                             sample_budget=max(samples // 2, 1000),
-                             population=POPULATION, seed=0)
+            spec = ExploreSpec(
+                workload=name,
+                strategy="ga",
+                objective=Objective(metric="energy", alpha=0.002),
+                hw=HWSpace(mode="shared", base=base),
+                sample_budget=max(samples // 2, 1000),
+                seed=0,
+                options=GAOptions(population=POPULATION),
+            )
+            res = run(spec, graph=g)
             for b in BATCHES:
                 m = table3_metrics(res.plan, res.acc, n, b)
                 m["size_kb"] = res.acc.glb_bytes // 1024
@@ -62,7 +68,7 @@ def run(samples: int = COOPT_SAMPLES) -> Dict:
 
 
 def main() -> None:
-    res = run()
+    res = run_all()
     for name, rows in res.items():
         t = Timer()
         e11, e21 = rows[(1, 1)]["energy_mj"], rows[(2, 1)]["energy_mj"]

@@ -1,16 +1,18 @@
 """Paper Tables 1-2: hardware-mapping co-exploration with separate / shared
 buffers.  Methods: fixed-HW (S/M/L) + partition-only, two-step RS+GA / GS+GA,
 co-opt SA and Cocco.  Cost = Formula 2 (BUF_SIZE + alpha * energy),
-alpha = 0.002, energy metric.  Claim: co-opt (Cocco) <= two-step <= fixed."""
+alpha = 0.002, energy metric.  Claim: co-opt (Cocco) <= two-step <= fixed.
+
+Every method is a registry strategy on the same ExploreSpec family, with one
+shared CachedEvaluator per model."""
 
 from __future__ import annotations
 
 from dataclasses import replace
 from typing import Dict
 
-from repro.core import AcceleratorConfig, CachedEvaluator, Objective, co_explore, partition_only
-from repro.core.baselines import run_sa, run_two_step
-from repro.core.ga import HWSpace
+from repro.api import ExploreSpec, GAOptions, TwoStepOptions, run
+from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
@@ -28,16 +30,31 @@ FIXED = {
 def final_cost(g, acc, ev, samples) -> float:
     """Paper §5.3.1: after choosing HW, run partition-only and report
     Formula-2 cost at that hardware point."""
-    res = partition_only(g, acc, metric="energy",
-                         sample_budget=samples, population=POPULATION,
-                         seed=1, ev=ev)
+    spec = ExploreSpec(
+        workload=g.name,
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=None),
+        hw=HWSpace(mode="fixed", base=acc),
+        sample_budget=samples,
+        seed=1,
+        options=GAOptions(population=POPULATION),
+    )
+    res = run(spec, graph=g, ev=ev)
     return acc.buf_size_total + ALPHA * res.plan.energy_pj
 
 
 def run_model(name: str, mode: str, samples: int) -> Dict:
     g = build(name)
     ev = CachedEvaluator(g)
-    obj = Objective(metric="energy", alpha=ALPHA)
+    coopt = ExploreSpec(
+        workload=name,
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=ALPHA),
+        hw=HWSpace(mode=mode),
+        sample_budget=samples,
+        seed=4,
+        options=GAOptions(population=POPULATION),
+    )
     out: Dict[str, Dict] = {}
     part_budget = max(samples // 2, 1000)
 
@@ -49,38 +66,37 @@ def run_model(name: str, mode: str, samples: int) -> Dict:
             "cost": final_cost(g, acc, ev, part_budget),
         }
 
-    hw = HWSpace(mode=mode)
     for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
-        res = run_two_step(g, obj, hw, sampler=sampler,
-                           capacity_samples=4,
-                           samples_per_capacity=max(samples // 4, 500),
-                           seed=2)
-        acc = res.best.acc
+        res = run(replace(coopt, strategy="two_step", seed=2,
+                          options=TwoStepOptions(
+                              sampler=sampler, capacity_samples=4,
+                              samples_per_capacity=max(samples // 4, 500))),
+                  graph=g)
+        acc = res.acc
         out[tag] = {"glb_kb": acc.glb_bytes // KB,
                     "wbuf_kb": acc.wbuf_bytes // KB,
                     "cost": final_cost(g, acc, ev, part_budget)}
 
-    res = run_sa(g, obj, hw, sample_budget=samples, seed=3, ev=ev)
-    out["sa"] = {"glb_kb": res.best.acc.glb_bytes // KB,
-                 "wbuf_kb": res.best.acc.wbuf_bytes // KB,
-                 "cost": final_cost(g, res.best.acc, ev, part_budget)}
+    res = run(replace(coopt, strategy="sa", seed=3, options=None),
+              graph=g, ev=ev)
+    out["sa"] = {"glb_kb": res.acc.glb_bytes // KB,
+                 "wbuf_kb": res.acc.wbuf_bytes // KB,
+                 "cost": final_cost(g, res.acc, ev, part_budget)}
 
-    cres = co_explore(g, mode=mode, metric="energy", alpha=ALPHA,
-                      sample_budget=samples, population=POPULATION,
-                      seed=4, ev=ev)
+    cres = run(coopt, graph=g, ev=ev)
     out["cocco"] = {"glb_kb": cres.acc.glb_bytes // KB,
                     "wbuf_kb": cres.acc.wbuf_bytes // KB,
                     "cost": final_cost(g, cres.acc, ev, part_budget)}
     return out
 
 
-def run(mode: str, samples: int = COOPT_SAMPLES) -> Dict:
+def run_all(mode: str, samples: int = COOPT_SAMPLES) -> Dict:
     return {m: run_model(m, mode, samples) for m in COOPT_MODELS}
 
 
 def main() -> None:
     for mode, table in (("separate", "table1"), ("shared", "table2")):
-        res = run(mode)
+        res = run_all(mode)
         for name, methods in res.items():
             t = Timer()
             best_base = min(v["cost"] for k, v in methods.items()

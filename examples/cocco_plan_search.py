@@ -3,12 +3,16 @@ partition + VMEM working set for each assigned architecture's transformer
 block and print the resulting execution plans.
 
     PYTHONPATH=src python examples/cocco_plan_search.py [--arch glm4-9b]
+
+Equivalent CLI:
+
+    PYTHONPATH=src python -m repro plan-tpu [--arch glm4-9b]
 """
 
 import argparse
 
-from repro.configs import ARCHS, get_config
-from repro.core.tpu_adapter import plan_architecture
+from repro.api import plan_tpu
+from repro.configs import ARCHS
 
 
 def main():
@@ -19,8 +23,7 @@ def main():
     args = ap.parse_args()
     archs = [args.arch] if args.arch else ARCHS
     for arch in archs:
-        cfg = get_config(arch)
-        plan = plan_architecture(cfg, sample_budget=args.samples)
+        plan = plan_tpu(arch, sample_budget=args.samples)
         print(plan.summary())
 
 

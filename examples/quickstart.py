@@ -2,35 +2,48 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Reproduces the paper's core loop end-to-end in ~a minute: build the
-computation graph, co-explore (partition x memory config), and compare
-against the Halide-greedy and Irregular-NN DP baselines.
+Reproduces the paper's core loop end-to-end in ~a minute through the unified
+exploration API: build one ExploreSpec, run the Halide-greedy and
+Irregular-NN DP baselines and Cocco's GA from the strategy registry (all
+sharing one cost evaluator), and rank the results.
+
+Equivalent CLI:
+
+    PYTHONPATH=src python -m repro compare --workload resnet50 \
+        --strategies greedy,dp,ga --metric energy --alpha 0.002 \
+        --hw-mode shared --budget 4000 --opt population=60
 """
 
-from repro.core import AcceleratorConfig, CachedEvaluator, Objective, co_explore
-from repro.core.baselines import dp_partition, greedy_partition
-from repro.core.netlib import build
+from repro.api import ExploreSpec, GAOptions, compare
+from repro.core import HWSpace, Objective
 
 
 def main():
-    g = build("resnet50")
-    print(g.summary())
+    spec = ExploreSpec(
+        workload="resnet50",
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=0.002),
+        hw=HWSpace(mode="shared"),
+        sample_budget=4000,
+        seed=0,
+        options=GAOptions(population=60),
+    )
+    results = {r.strategy: r for r in compare(spec, ["greedy", "dp", "ga"])}
 
-    acc = AcceleratorConfig()  # 1MB GLB + 1.125MB WBUF, 2 TOPS (paper §5.1.2)
-    obj = Objective(metric="ema")
-    ev = CachedEvaluator(g)
-
-    _, greedy_plan, _ = greedy_partition(g, acc, obj, ev=ev)
-    _, dp_plan, _ = dp_partition(g, acc, obj, ev=ev)
+    greedy_plan = results["greedy"].plan
+    dp_plan = results["dp"].plan
     print(f"greedy (Halide):      EMA {greedy_plan.ema_total/1e6:8.2f} MB")
     print(f"DP (Irregular-NN):    EMA {dp_plan.ema_total/1e6:8.2f} MB")
 
-    res = co_explore(g, mode="shared", metric="energy", alpha=0.002,
-                     sample_budget=4000, population=60, seed=0)
+    res = results["ga"]
     print(f"\nCocco co-exploration: {res.summary()}")
     print(f"  {res.n_subgraphs} subgraphs; largest fuses "
           f"{max(len(s) for s in res.groups)} layers")
     print(f"  vs greedy EMA: {res.plan.ema_total / greedy_plan.ema_total:.2f}x")
+
+    # every run is a reproducible artifact: spec and result round-trip JSON
+    print(f"\nspec JSON: {len(spec.to_json())} bytes; "
+          f"result JSON: {len(res.to_json())} bytes")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""Unified exploration API: ``ExploreSpec`` -> strategy registry -> ``ExploreResult``.
+
+One composable, serializable surface for every search method in the repo
+(GA, greedy, DP, SA, two-step, exhaustive enumeration), every cost backend,
+and every caller (benchmarks, examples, the ``python -m repro`` CLI, the
+TPU planner).  Quickstart::
+
+    from repro.api import ExploreSpec, run
+    spec = ExploreSpec(workload="resnet50", strategy="ga", sample_budget=4000)
+    print(run(spec).summary())
+
+Specs and results round-trip losslessly through JSON
+(``spec == ExploreSpec.from_json(spec.to_json())``), so any run can be
+archived, shared, and reproduced bit-for-bit from its artifact.  Use
+:func:`compare` to run several strategies on one spec with a shared cost
+evaluator, and :func:`register_strategy` to plug in new methods.
+"""
+
+from .registry import (
+    Strategy,
+    StrategyEntry,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+)
+from .spec import (
+    DPOptions,
+    EnumOptions,
+    ExploreSpec,
+    GAOptions,
+    GreedyOptions,
+    SAOptions,
+    TwoStepOptions,
+)
+from .result import ExploreResult
+from .strategies import build_workload, compare, plan_tpu, run
+
+__all__ = [
+    "DPOptions",
+    "EnumOptions",
+    "ExploreResult",
+    "ExploreSpec",
+    "GAOptions",
+    "GreedyOptions",
+    "SAOptions",
+    "Strategy",
+    "StrategyEntry",
+    "TwoStepOptions",
+    "build_workload",
+    "compare",
+    "get_strategy",
+    "list_strategies",
+    "plan_tpu",
+    "register_strategy",
+    "run",
+]

@@ -1,0 +1,205 @@
+"""``python -m repro`` — run explorations from the command line.
+
+Subcommands:
+
+* ``explore``   — run one strategy on one workload; print the summary and
+                  optionally write the spec/result as JSON artifacts.
+* ``compare``   — run several strategies on the same spec (one shared cost
+                  evaluator) and print a ranked table.
+* ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
+
+Examples::
+
+    python -m repro explore --workload resnet50 --strategy ga \
+        --metric energy --alpha 0.002 --hw-mode shared --budget 4000
+    python -m repro compare --workload vgg16 --strategies greedy,dp,ga
+    python -m repro plan-tpu --arch glm4-9b --samples 2000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Optional
+
+from repro.core.ga import HWSpace, Objective
+
+from .registry import list_strategies, options_class_for
+from .result import ExploreResult
+from .spec import ExploreSpec
+from .strategies import compare, plan_tpu, run
+
+
+def _parse_opt_overrides(pairs: List[str]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"--opt expects KEY=VALUE, got {pair!r}")
+        key, raw = pair.split("=", 1)
+        try:
+            out[key] = json.loads(raw)
+        except json.JSONDecodeError:
+            out[key] = raw
+    return out
+
+
+def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
+    if args.spec:
+        with open(args.spec) as f:
+            return ExploreSpec.from_json(f.read())
+    if not args.workload:
+        raise SystemExit("either --spec or --workload is required")
+    opts_cls = options_class_for(args.strategy)
+    if opts_cls is None:
+        raise SystemExit(
+            f"unknown strategy {args.strategy!r}; "
+            f"registered: {', '.join(list_strategies())}")
+    options = opts_cls(**_parse_opt_overrides(args.opt))
+    return ExploreSpec(
+        workload=args.workload,
+        strategy=args.strategy,
+        objective=Objective(metric=args.metric, alpha=args.alpha),
+        hw=HWSpace(mode=args.hw_mode),
+        sample_budget=args.budget,
+        seed=args.seed,
+        out_tile=args.out_tile,
+        options=options,
+    )
+
+
+def _maybe_save(path: Optional[str], payload: str) -> None:
+    if path:
+        with open(path, "w") as f:
+            f.write(payload)
+
+
+def _result_row(res: ExploreResult) -> Dict[str, str]:
+    plan = res.plan
+    return {
+        "strategy": res.strategy,
+        "cost": f"{res.cost:.4g}",
+        "EMA_MB": f"{plan.ema_total/1e6:.2f}" if plan else "-",
+        "energy_mJ": f"{plan.energy_pj/1e9:.3f}" if plan else "-",
+        "subgraphs": str(res.n_subgraphs),
+        "samples": str(res.samples),
+        "evals": str(res.evaluations),
+    }
+
+
+def _print_table(rows: List[Dict[str, str]]) -> None:
+    cols = ["rank"] + list(rows[0].keys()) if rows else []
+    table = [dict(rank=str(i + 1), **r) for i, r in enumerate(rows)]
+    widths = {c: max(len(c), *(len(r[c]) for r in table)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in table:
+        print("  ".join(r[c].ljust(widths[c]) for c in cols))
+
+
+def cmd_explore(args: argparse.Namespace) -> int:
+    spec = _spec_from_args(args)
+    _maybe_save(args.save_spec, spec.to_json(indent=2))
+    res = run(spec)
+    print(res.summary())
+    if res.history:
+        print(f"  converged: cost {res.history[0][1]:.4g} -> "
+              f"{res.history[-1][1]:.4g} over {res.samples} samples "
+              f"({res.evaluations} cost-model evals)")
+    _maybe_save(args.out, res.to_json(indent=2))
+    if args.out:
+        print(f"  result written to {args.out}")
+    return 0
+
+
+def cmd_compare(args: argparse.Namespace) -> int:
+    spec = _spec_from_args(args)
+    _maybe_save(args.save_spec, spec.to_json(indent=2))
+    names = [s.strip() for s in args.strategies.split(",") if s.strip()]
+    if not names:
+        raise SystemExit("--strategies needs at least one strategy name")
+    results = compare(spec, names)
+    ranked = sorted(results, key=lambda r: r.cost)
+    _print_table([_result_row(r) for r in ranked])
+    best = ranked[0]
+    print(f"\nbest: {best.summary()}")
+    _maybe_save(args.out,
+                json.dumps([r.to_dict() for r in ranked], indent=2))
+    return 0
+
+
+def cmd_plan_tpu(args: argparse.Namespace) -> int:
+    from repro.configs import ARCHS
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    for arch in archs:
+        plan = plan_tpu(arch, tokens=args.tokens, layer_idx=args.layer,
+                        sample_budget=args.samples, seed=args.seed)
+        print(plan.summary())
+    return 0
+
+
+def _add_spec_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--spec", help="load an ExploreSpec JSON file "
+                                  "(overrides the flags below)")
+    p.add_argument("--workload", help="netlib model name, e.g. resnet50")
+    p.add_argument("--strategy", default="ga",
+                   help=f"one of: {', '.join(list_strategies())}")
+    p.add_argument("--metric", default="ema",
+                   choices=["ema", "energy", "latency"])
+    p.add_argument("--alpha", type=float, default=None,
+                   help="Formula-2 weight (None => partition-only Formula 1)")
+    p.add_argument("--hw-mode", default="fixed",
+                   choices=["fixed", "separate", "shared"])
+    p.add_argument("--budget", type=int, default=5_000,
+                   help="sample budget for search strategies")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out-tile", type=int, default=1)
+    p.add_argument("--opt", action="append", default=[], metavar="KEY=VALUE",
+                   help="strategy option override, e.g. --opt population=40")
+    p.add_argument("--save-spec", metavar="PATH",
+                   help="write the resolved ExploreSpec JSON here")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="Cocco hardware-mapping co-exploration (unified API)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    pe = sub.add_parser("explore", help="run one strategy on one workload")
+    _add_spec_args(pe)
+    pe.add_argument("--out", metavar="PATH",
+                    help="write the ExploreResult JSON here")
+    pe.set_defaults(fn=cmd_explore)
+
+    pc = sub.add_parser("compare",
+                        help="run several strategies on one spec, ranked")
+    _add_spec_args(pc)
+    pc.add_argument("--strategies", default="greedy,dp,ga",
+                    help="comma-separated strategy names")
+    pc.add_argument("--out", metavar="PATH",
+                    help="write all ExploreResult JSONs here (a list)")
+    pc.set_defaults(fn=cmd_compare)
+
+    pt = sub.add_parser("plan-tpu",
+                        help="Cocco as the TPU execution planner")
+    pt.add_argument("--arch", default=None,
+                    help="model config name (default: all)")
+    pt.add_argument("--tokens", type=int, default=8192)
+    pt.add_argument("--layer", type=int, default=None)
+    pt.add_argument("--samples", type=int, default=2_000)
+    pt.add_argument("--seed", type=int, default=0)
+    pt.set_defaults(fn=cmd_plan_tpu)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (KeyError, ValueError, TypeError, OSError, RuntimeError) as err:
+        # user-input errors (unknown workload, bad option key, missing spec
+        # file, absent optional dep) -> clean message, nonzero exit
+        print(f"error: {err}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,264 @@
+"""Built-in strategies + the ``run``/``compare`` entry points.
+
+All six search methods from the paper's evaluation run under the same
+registry and return :class:`ExploreResult`:
+
+* ``ga``        — Cocco's genetic co-exploration (:func:`repro.core.ga.run_ga`)
+* ``greedy``    — Halide-style greedy merging
+* ``dp``        — Irregular-NN DP over depth order
+* ``enum``      — exact (budgeted) enumeration over ideals
+* ``sa``        — simulated annealing
+* ``two_step``  — RS+GA / GS+GA decoupled capacity search
+
+Fixed-hardware methods (``greedy``/``dp``/``enum``) evaluate at
+``spec.hw.base`` regardless of the HW-space mode.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from typing import Iterable, List, Optional, Sequence, Set
+
+from repro.core.baselines import (
+    dp_partition,
+    enumerate_partitions,
+    greedy_partition,
+    run_sa,
+    run_two_step,
+)
+from repro.core.cost import CachedEvaluator, PlanCost
+from repro.core.ga import SearchResult, run_ga
+from repro.core.graph import Graph
+
+from .registry import get_strategy, list_strategies, register_strategy
+from .result import ExploreResult
+from .spec import (
+    DPOptions,
+    EnumOptions,
+    ExploreSpec,
+    GAOptions,
+    GreedyOptions,
+    SAOptions,
+    TwoStepOptions,
+)
+
+
+def build_workload(name: str) -> Graph:
+    """Resolve a spec's workload name to a netlib graph."""
+    from repro.core import netlib
+
+    try:
+        builder = netlib.PAPER_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; known: {sorted(netlib.PAPER_MODELS)}"
+        ) from None
+    try:
+        return builder()
+    except ModuleNotFoundError as err:
+        raise RuntimeError(
+            f"workload {name!r} needs an optional dependency: {err}"
+        ) from err
+
+
+def run(spec: ExploreSpec, graph: Optional[Graph] = None,
+        ev: Optional[CachedEvaluator] = None, **runtime) -> ExploreResult:
+    """Run ``spec.strategy`` on ``spec`` and return an :class:`ExploreResult`.
+
+    ``graph`` overrides workload-name resolution (for custom graphs);
+    ``ev`` shares one :class:`CachedEvaluator` across calls (e.g. from
+    :func:`compare`).  ``runtime`` carries non-serializable extras a strategy
+    may accept (the GA takes ``init_groups``).
+    """
+    g = graph if graph is not None else build_workload(spec.workload)
+    ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
+    entry = get_strategy(spec.strategy)
+    options = spec.options
+    if options is None and entry.options_cls is not None:
+        options = entry.options_cls()
+    if entry.options_cls is not None and not isinstance(options,
+                                                        entry.options_cls):
+        raise TypeError(
+            f"strategy {spec.strategy!r} expects options of type "
+            f"{entry.options_cls.__name__}, got {type(options).__name__}"
+        )
+    result = entry.fn(spec, options, g, ev, **runtime)
+    result.spec = spec
+    result.meta.setdefault("graph", g.name)
+    return result
+
+
+def compare(spec: ExploreSpec, strategies: Optional[Iterable[str]] = None,
+            graph: Optional[Graph] = None,
+            ev: Optional[CachedEvaluator] = None) -> List[ExploreResult]:
+    """Run several strategies on one spec, sharing a single evaluator.
+
+    Strategies other than ``spec.strategy`` run with their default options.
+    Returns results in the order given (rank by ``cost`` to get a table).
+    """
+    names = list(strategies) if strategies is not None else list_strategies()
+    g = graph if graph is not None else build_workload(spec.workload)
+    ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
+    results = []
+    for name in names:
+        sub = spec if name == spec.strategy else replace(
+            spec, strategy=name, options=None)
+        results.append(run(sub, graph=g, ev=ev))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _from_search(spec: ExploreSpec, res: SearchResult,
+                 evaluations: int, **meta) -> ExploreResult:
+    best = res.best
+    return ExploreResult(
+        workload=spec.workload,
+        strategy=spec.strategy,
+        groups=best.groups,
+        acc=best.acc,
+        plan=best.plan,
+        cost=best.cost,
+        objective=spec.objective,
+        history=res.history,
+        samples=res.samples,
+        evaluations=evaluations,
+        population_log=res.population_log,
+        meta=dict(meta),
+    )
+
+
+def _fixed_point(spec: ExploreSpec, groups: Sequence[Set[int]],
+                 plan: PlanCost, n_eval: int,
+                 evaluations: int, **meta) -> ExploreResult:
+    acc = spec.hw.base
+    cost = spec.objective.cost(plan, acc)
+    return ExploreResult(
+        workload=spec.workload,
+        strategy=spec.strategy,
+        groups=[set(s) for s in groups],
+        acc=acc,
+        plan=plan,
+        cost=cost,
+        objective=spec.objective,
+        history=[(max(n_eval, 1), cost)],
+        samples=n_eval,
+        evaluations=evaluations,
+        meta=dict(meta),
+    )
+
+
+# ---------------------------------------------------------------------------
+# built-in strategies
+# ---------------------------------------------------------------------------
+
+@register_strategy("ga", GAOptions)
+def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
+                 ev: CachedEvaluator, init_groups=None) -> ExploreResult:
+    ev0 = ev.evaluations
+    seeds = [list(gr) for gr in init_groups] if init_groups else []
+    for name in opts.seed_from:
+        if name == spec.strategy:
+            raise ValueError(
+                f"seed_from cannot include the running strategy {name!r}")
+        seeded = run(replace(spec, strategy=name, options=None),
+                     graph=g, ev=ev)
+        if seeded.groups:
+            seeds.append(seeded.groups)
+    res = run_ga(
+        g, spec.objective, spec.hw,
+        sample_budget=spec.sample_budget,
+        population=opts.population,
+        tournament_k=opts.tournament_k,
+        crossover_frac=opts.crossover_frac,
+        elite=opts.elite,
+        seed=spec.seed,
+        out_tile=spec.out_tile,
+        init_groups=[[set(s) for s in gr] for gr in seeds] or None,
+        log_populations=opts.log_populations,
+        ev=ev,
+    )
+    return _from_search(spec, res, ev.evaluations - ev0,
+                        seeded_from=list(opts.seed_from))
+
+
+@register_strategy("greedy", GreedyOptions)
+def _strategy_greedy(spec: ExploreSpec, opts: GreedyOptions, g: Graph,
+                     ev: CachedEvaluator) -> ExploreResult:
+    ev0 = ev.evaluations
+    groups, plan, n_eval = greedy_partition(
+        g, spec.hw.base, spec.objective, out_tile=spec.out_tile, ev=ev,
+        eval_budget=opts.eval_budget)
+    return _fixed_point(spec, groups, plan, n_eval, ev.evaluations - ev0)
+
+
+@register_strategy("dp", DPOptions)
+def _strategy_dp(spec: ExploreSpec, opts: DPOptions, g: Graph,
+                 ev: CachedEvaluator) -> ExploreResult:
+    ev0 = ev.evaluations
+    groups, plan, n_eval = dp_partition(
+        g, spec.hw.base, spec.objective, out_tile=spec.out_tile, ev=ev)
+    return _fixed_point(spec, groups, plan, n_eval, ev.evaluations - ev0)
+
+
+@register_strategy("enum", EnumOptions)
+def _strategy_enum(spec: ExploreSpec, opts: EnumOptions, g: Graph,
+                   ev: CachedEvaluator) -> ExploreResult:
+    ev0 = ev.evaluations
+    er = enumerate_partitions(
+        g, spec.hw.base, spec.objective, out_tile=spec.out_tile,
+        state_budget=opts.state_budget, ev=ev)
+    meta = {"complete": er.complete, "states": er.states}
+    if er.groups is None or er.plan is None:
+        return ExploreResult(
+            workload=spec.workload, strategy=spec.strategy, groups=[],
+            acc=spec.hw.base, plan=None, cost=math.inf,
+            objective=spec.objective, history=[], samples=er.states,
+            evaluations=ev.evaluations - ev0, meta=meta)
+    return _fixed_point(spec, er.groups, er.plan, er.states,
+                        ev.evaluations - ev0, **meta)
+
+
+@register_strategy("sa", SAOptions)
+def _strategy_sa(spec: ExploreSpec, opts: SAOptions, g: Graph,
+                 ev: CachedEvaluator) -> ExploreResult:
+    ev0 = ev.evaluations
+    res = run_sa(
+        g, spec.objective, spec.hw, sample_budget=spec.sample_budget,
+        t0=opts.t0, t_end=opts.t_end, seed=spec.seed,
+        out_tile=spec.out_tile, ev=ev)
+    return _from_search(spec, res, ev.evaluations - ev0)
+
+
+@register_strategy("two_step", TwoStepOptions)
+def _strategy_two_step(spec: ExploreSpec, opts: TwoStepOptions, g: Graph,
+                       ev: CachedEvaluator) -> ExploreResult:
+    res = run_two_step(
+        g, spec.objective, spec.hw, sampler=opts.sampler,
+        capacity_samples=opts.capacity_samples,
+        samples_per_capacity=opts.samples_per_capacity,
+        seed=spec.seed, out_tile=spec.out_tile)
+    # two-step runs its own per-capacity evaluators; report their total
+    return _from_search(spec, res, res.evaluations, sampler=opts.sampler)
+
+
+# ---------------------------------------------------------------------------
+# TPU planning (wraps the paper-faithful adapter)
+# ---------------------------------------------------------------------------
+
+def plan_tpu(arch: str, tokens: int = 8192, layer_idx: Optional[int] = None,
+             sample_budget: int = 3_000, seed: int = 0):
+    """Run Cocco as the TPU execution planner for one architecture.
+
+    Thin wrapper over :func:`repro.core.tpu_adapter.plan_architecture` so
+    callers (CLI ``plan-tpu``, examples) go through one surface.
+    """
+    from repro.configs import get_config
+    from repro.core.tpu_adapter import plan_architecture
+
+    cfg = get_config(arch)
+    return plan_architecture(cfg, tokens_local=tokens, layer_idx=layer_idx,
+                             sample_budget=sample_budget, seed=seed)

@@ -309,17 +309,21 @@ def run_two_step(
 ) -> SearchResult:
     """Decoupled capacity search then partition-only GA per capacity."""
     rng = random.Random(seed)
-    if hw.mode == "separate":
-        cands = [(gl, wb) for gl in hw.glb_candidates
-                 for wb in hw.wbuf_candidates]
+    if hw.mode == "fixed":
+        # degenerate: the single capacity is the base point itself
+        picks = [(hw.base.glb_bytes, hw.base.wbuf_bytes)]
     else:
-        cands = [(sh, 0) for sh in hw.shared_candidates]
-    if sampler == "random":
-        picks = [cands[rng.randrange(len(cands))]
-                 for _ in range(capacity_samples)]
-    else:  # grid: coarse, large-to-small (paper §5.3.2)
-        step = max(1, len(cands) // capacity_samples)
-        picks = list(reversed(cands))[::step][:capacity_samples]
+        if hw.mode == "separate":
+            cands = [(gl, wb) for gl in hw.glb_candidates
+                     for wb in hw.wbuf_candidates]
+        else:
+            cands = [(sh, 0) for sh in hw.shared_candidates]
+        if sampler == "random":
+            picks = [cands[rng.randrange(len(cands))]
+                     for _ in range(capacity_samples)]
+        else:  # grid: coarse, large-to-small (paper §5.3.2)
+            step = max(1, len(cands) // capacity_samples)
+            picks = list(reversed(cands))[::step][:capacity_samples]
 
     best: Optional[Genome] = None
     history: List[Tuple[int, float]] = []
@@ -327,8 +331,8 @@ def run_two_step(
     evals = 0
     running = math.inf
     for (glb, wb) in picks:
-        acc = replace(hw.base, glb_bytes=glb,
-                      wbuf_bytes=wb, shared=(hw.mode == "shared"))
+        shared = hw.base.shared if hw.mode == "fixed" else hw.mode == "shared"
+        acc = replace(hw.base, glb_bytes=glb, wbuf_bytes=wb, shared=shared)
         res = run_ga(
             g, objective, HWSpace(mode="fixed", base=acc),
             sample_budget=samples_per_capacity,

@@ -1,19 +1,24 @@
 """High-level Cocco API (paper Fig. 10).
 
+.. deprecated::
+    ``co_explore`` and ``partition_only`` are thin shims over the unified
+    exploration API (:mod:`repro.api`): build an
+    :class:`~repro.api.ExploreSpec` and call :func:`repro.api.run` instead.
+    They are kept so existing imports and call sites keep working, and they
+    still return a :class:`CoccoResult`.
+
 ``co_explore``     — Formula 2: joint (partition, memory-config) search.
 ``partition_only`` — Formula 1: partition under a fixed accelerator.
-
-Both return a :class:`CoccoResult` carrying the chosen plan, hardware point,
-per-subgraph costs, and the convergence history for sample-efficiency plots.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import List, Optional, Set, Tuple
 
 from .cost import AcceleratorConfig, CachedEvaluator, PlanCost
-from .ga import Genome, HWSpace, Objective, SearchResult, run_ga
+from .ga import HWSpace, Objective
 from .graph import Graph
 
 
@@ -46,14 +51,35 @@ class CoccoResult:
         )
 
 
-def _result(g: Graph, res: SearchResult, obj: Objective) -> CoccoResult:
-    best = res.best
+def _run_ga_spec(
+    g: Graph,
+    obj: Objective,
+    hw: HWSpace,
+    sample_budget: int,
+    population: int,
+    seed: int,
+    out_tile: int,
+    log_populations: bool,
+    ev: Optional[CachedEvaluator],
+    ga_kw: dict,
+) -> CoccoResult:
+    """Shared shim body: ExploreSpec -> run -> CoccoResult."""
+    from repro.api import ExploreSpec, GAOptions
+    from repro.api import run as api_run
+
+    init_groups = ga_kw.pop("init_groups", None)
+    opts = GAOptions(population=population, log_populations=log_populations,
+                     **ga_kw)
+    spec = ExploreSpec(workload=g.name, strategy="ga", objective=obj, hw=hw,
+                       sample_budget=sample_budget, seed=seed,
+                       out_tile=out_tile, options=opts)
+    res = api_run(spec, graph=g, ev=ev, init_groups=init_groups)
     return CoccoResult(
         graph=g.name,
-        groups=best.groups,
-        acc=best.acc,
-        plan=best.plan,
-        cost=best.cost,
+        groups=res.groups,
+        acc=res.acc,
+        plan=res.plan,
+        cost=res.cost,
         objective=obj,
         history=res.history,
         samples=res.samples,
@@ -72,13 +98,16 @@ def partition_only(
     ev: Optional[CachedEvaluator] = None,
     **ga_kw,
 ) -> CoccoResult:
+    warnings.warn(
+        "partition_only is deprecated; use repro.api.run(ExploreSpec(...)) "
+        "with hw=HWSpace(mode='fixed', base=acc)",
+        DeprecationWarning, stacklevel=2)
     acc = acc or AcceleratorConfig()
     obj = Objective(metric=metric, alpha=None)
     hw = HWSpace(mode="fixed", base=acc)
-    res = run_ga(g, obj, hw, sample_budget=sample_budget,
-                 population=population, seed=seed, out_tile=out_tile,
-                 ev=ev, **ga_kw)
-    return _result(g, res, obj)
+    log_populations = ga_kw.pop("log_populations", False)
+    return _run_ga_spec(g, obj, hw, sample_budget, population, seed,
+                        out_tile, log_populations, ev, ga_kw)
 
 
 def co_explore(
@@ -95,10 +124,12 @@ def co_explore(
     ev: Optional[CachedEvaluator] = None,
     **ga_kw,
 ) -> CoccoResult:
+    warnings.warn(
+        "co_explore is deprecated; use repro.api.run(ExploreSpec(...)) "
+        "with hw=HWSpace(mode=mode, base=base)",
+        DeprecationWarning, stacklevel=2)
     base = base or AcceleratorConfig()
     obj = Objective(metric=metric, alpha=alpha)
     hw = HWSpace(mode=mode, base=base)
-    res = run_ga(g, obj, hw, sample_budget=sample_budget,
-                 population=population, seed=seed, out_tile=out_tile,
-                 log_populations=log_populations, ev=ev, **ga_kw)
-    return _result(g, res, obj)
+    return _run_ga_spec(g, obj, hw, sample_budget, population, seed,
+                        out_tile, log_populations, ev, ga_kw)

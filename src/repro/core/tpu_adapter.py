@@ -19,13 +19,15 @@ EXPERIMENTS.md §Perf as the paper-faithful planning step.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Set, Tuple
 
 from repro.models.config import FFN_MOE, FFN_MOE_RESIDUAL, ModelConfig
 
-from .cocco import CoccoResult, co_explore
 from .cost import MB, AcceleratorConfig
 from .graph import FULL, Graph
+
+if TYPE_CHECKING:  # repro.api imports repro.core; keep the cycle lazy
+    from repro.api import ExploreResult
 
 # TPU v5e-class accelerator constants for the Cocco cost model
 VMEM_BYTES = 96 * MB            # usable VMEM working set
@@ -138,7 +140,7 @@ class ExecutionPlan:
     hbm_bytes: int
     hbm_bytes_unfused: int
     block_m: int                    # suggested kernel row-block size
-    result: Optional[CoccoResult] = None
+    result: Optional["ExploreResult"] = None
 
     @property
     def traffic_saving(self) -> float:
@@ -167,14 +169,20 @@ def plan_architecture(cfg: ModelConfig, tokens_local: int = 8192,
     # VMEM is fixed hardware on TPU: partition under the fixed budget
     # (Formula 1); the *claimed working set* of the winning plan is the
     # memory-configuration output (it sizes the kernels' BlockSpecs).
-    from .cocco import partition_only
+    from repro.api import ExploreSpec, GAOptions
+    from repro.api import run as api_run
+    from repro.core.ga import HWSpace, Objective
+
     from .cost import CachedEvaluator
     from .memory import subgraph_footprint
 
     ev = CachedEvaluator(g, out_tile=out_tile)
-    res = partition_only(g, TPU_ACC, metric="ema",
-                         sample_budget=sample_budget, population=48,
-                         seed=seed, out_tile=out_tile, ev=ev)
+    spec = ExploreSpec(workload=g.name, strategy="ga",
+                       objective=Objective(metric="ema", alpha=None),
+                       hw=HWSpace(mode="fixed", base=TPU_ACC),
+                       sample_budget=sample_budget, seed=seed,
+                       out_tile=out_tile, options=GAOptions(population=48))
+    res = api_run(spec, graph=g, ev=ev)
     unfused = ev.plan([{v} for v in range(g.n)], TPU_ACC)
     groups = [[g.nodes[v].name for v in sorted(s)] for s in res.groups
               if len(s) > 0]

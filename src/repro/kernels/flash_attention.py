@@ -23,6 +23,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover
+    def _CompilerParams(**_kw):
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; incompatible jax version")
+
 NEG_INF = -1e30
 
 
@@ -122,7 +131,7 @@ def flash_attention(
             pltpu.VMEM((block_q,), jnp.float32),     # running max m
             pltpu.VMEM((block_q,), jnp.float32),     # running denom l
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

@@ -18,6 +18,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover
+    def _CompilerParams(**_kw):
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; incompatible jax version")
+
 
 def _ffn_kernel(x_ref, wg_ref, wi_ref, wo_ref, o_ref, acc_ref, *, nf: int):
     fb = pl.program_id(1)
@@ -75,7 +84,7 @@ def fused_swiglu(
         out_specs=pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((M, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, wg, wi, wo)

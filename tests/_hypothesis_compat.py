@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim: ``from _hypothesis_compat import given, settings, st``.
+
+When hypothesis is installed (see requirements-dev.txt) this re-exports the
+real API.  When it isn't, the decorators turn each property test into a
+skipped test — so the suite still collects and every non-property test runs.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Absorbs any strategy construction (st.integers(...), @st.composite)."""
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    st = _AnyStrategy()

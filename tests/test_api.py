@@ -1,0 +1,282 @@
+"""Unified exploration API: spec/result serialization, strategy registry
+parity, determinism, and the deprecated shims."""
+
+import math
+from dataclasses import replace
+
+import pytest
+from conftest import small_graph
+
+from repro.api import (
+    DPOptions,
+    EnumOptions,
+    ExploreResult,
+    ExploreSpec,
+    GAOptions,
+    GreedyOptions,
+    SAOptions,
+    TwoStepOptions,
+    compare,
+    get_strategy,
+    list_strategies,
+    register_strategy,
+    run,
+)
+from repro.core import (
+    AcceleratorConfig,
+    CachedEvaluator,
+    CoccoResult,
+    HWSpace,
+    Objective,
+    co_explore,
+    partition_only,
+    singleton_partition,
+)
+
+KB = 1 << 10
+
+ALL_STRATEGIES = ("dp", "enum", "ga", "greedy", "sa", "two_step")
+
+
+def fixed_spec(**kw):
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    defaults = dict(
+        workload="dd",
+        strategy="ga",
+        objective=Objective(metric="ema", alpha=None),
+        hw=HWSpace(mode="fixed", base=acc),
+        sample_budget=400,
+        seed=0,
+        options=GAOptions(population=20),
+    )
+    defaults.update(kw)
+    return ExploreSpec(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_all_six_strategies_registered():
+    assert set(ALL_STRATEGIES) <= set(list_strategies())
+    for name in ALL_STRATEGIES:
+        entry = get_strategy(name)
+        assert entry.name == name and callable(entry.fn)
+
+
+def test_unknown_strategy_raises_with_known_list():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("nope")
+
+
+def test_register_custom_strategy():
+    @register_strategy("singletons_only", DPOptions)
+    def _singletons(spec, opts, g, ev):
+        groups = singleton_partition(g)
+        plan = ev.plan(groups, spec.hw.base)
+        cost = spec.objective.cost(plan, spec.hw.base)
+        return ExploreResult(
+            workload=spec.workload, strategy=spec.strategy, groups=groups,
+            acc=spec.hw.base, plan=plan, cost=cost,
+            objective=spec.objective, history=[(1, cost)], samples=1,
+            evaluations=ev.evaluations)
+
+    res = run(fixed_spec(strategy="singletons_only", options=None),
+              graph=small_graph())
+    assert res.n_subgraphs == 8 and res.feasible
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip_exact():
+    spec = ExploreSpec(
+        workload="resnet50",
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=0.002),
+        hw=HWSpace(mode="shared"),
+        sample_budget=1234,
+        seed=7,
+        out_tile=2,
+        options=GAOptions(population=33, seed_from=("dp", "greedy")),
+    )
+    assert ExploreSpec.from_json(spec.to_json()) == spec
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_spec_roundtrip_every_strategy_defaults(strategy):
+    spec = ExploreSpec(workload="vgg16", strategy=strategy)
+    rt = ExploreSpec.from_json(spec.to_json())
+    assert rt == spec
+    assert type(rt.options) is type(spec.options)
+
+
+def test_result_json_roundtrip_preserves_cost_groups_plan():
+    g = small_graph()
+    spec = fixed_spec()
+    res = run(spec, graph=g)
+    rt = ExploreResult.from_json(res.to_json())
+    assert rt.cost == res.cost
+    assert rt.groups == res.groups
+    assert rt.history == res.history
+    assert rt.spec == spec
+    assert rt.acc == res.acc
+    assert rt.plan.ema_total == res.plan.ema_total
+    assert rt.plan.feasible == res.plan.feasible
+    assert math.isclose(rt.plan.energy_pj, res.plan.energy_pj)
+
+
+def test_infeasible_enum_result_roundtrips():
+    res = ExploreResult(
+        workload="x", strategy="enum", groups=[], acc=AcceleratorConfig(),
+        plan=None, cost=math.inf, objective=Objective(),
+        history=[], samples=0, meta={"complete": False})
+    rt = ExploreResult.from_json(res.to_json())
+    assert rt.plan is None and rt.cost == math.inf
+    assert not rt.feasible
+    assert "no plan" in rt.summary()
+
+
+# ---------------------------------------------------------------------------
+# parity: every strategy runs through run() and returns ExploreResult
+# ---------------------------------------------------------------------------
+
+def test_registry_parity_shared_evaluator():
+    g = small_graph()
+    ev = CachedEvaluator(g)
+    spec = fixed_spec(sample_budget=2000, options=GAOptions(population=40))
+    results = {}
+    for name, opts in (("greedy", GreedyOptions(eval_budget=2000)),
+                       ("dp", DPOptions()),
+                       ("ga", spec.options)):
+        results[name] = run(replace(spec, strategy=name, options=opts),
+                            graph=g, ev=ev)
+    for name, r in results.items():
+        assert isinstance(r, ExploreResult)
+        assert r.strategy == name
+        assert r.feasible and r.cost < math.inf
+        assert sum(len(s) for s in r.groups) == g.n
+        assert r.objective == spec.objective
+    # one shared evaluator: later strategies hit its cache
+    assert ev.lookups > ev.evaluations
+    # GA (seeded by nothing, 2k samples) matches/beats both baselines here
+    assert results["ga"].cost <= results["dp"].cost + 1e-9
+    assert results["ga"].cost <= results["greedy"].cost + 1e-9
+
+
+def test_all_six_run_on_one_spec():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    per_strategy = {
+        "ga": GAOptions(population=20),
+        "greedy": GreedyOptions(eval_budget=500),
+        "dp": DPOptions(),
+        "enum": EnumOptions(),
+        "sa": SAOptions(),
+        "two_step": TwoStepOptions(capacity_samples=2,
+                                   samples_per_capacity=100),
+    }
+    for name, opts in per_strategy.items():
+        hw = HWSpace(mode="shared" if name in ("sa", "two_step") else "fixed",
+                     base=acc)
+        res = run(fixed_spec(strategy=name, options=opts, hw=hw,
+                             sample_budget=300),
+                  graph=small_graph())
+        assert isinstance(res, ExploreResult), name
+        assert res.feasible, name
+        assert res.samples > 0, name
+    # enum on the small graph is exact and complete
+    enum_res = run(fixed_spec(strategy="enum", options=EnumOptions()),
+                   graph=small_graph())
+    assert enum_res.meta["complete"]
+
+
+def test_two_step_on_fixed_hw_space_keeps_base_point():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    res = run(fixed_spec(strategy="two_step",
+                         options=TwoStepOptions(capacity_samples=2,
+                                                samples_per_capacity=100)),
+              graph=g)
+    assert res.acc.glb_bytes == acc.glb_bytes
+    assert res.acc.wbuf_bytes == acc.wbuf_bytes
+    assert res.acc.shared == acc.shared
+
+
+def test_ga_seed_from_baselines_not_worse():
+    g = small_graph()
+    ev = CachedEvaluator(g)
+    seeded = run(fixed_spec(options=GAOptions(population=20,
+                                              seed_from=("dp", "greedy")),
+                            sample_budget=300),
+                 graph=g, ev=ev)
+    dp = run(fixed_spec(strategy="dp", options=None), graph=g, ev=ev)
+    assert seeded.cost <= dp.cost + 1e-9
+    assert seeded.meta["seeded_from"] == ["dp", "greedy"]
+
+
+def test_compare_shares_one_evaluator():
+    g = small_graph()
+    ev = CachedEvaluator(g)
+    results = compare(fixed_spec(), ["greedy", "dp", "ga"], graph=g, ev=ev)
+    assert [r.strategy for r in results] == ["greedy", "dp", "ga"]
+    assert all(r.feasible for r in results)
+    assert ev.lookups > ev.evaluations
+
+
+def test_wrong_options_type_raises():
+    with pytest.raises(TypeError, match="expects options"):
+        run(fixed_spec(strategy="greedy", options=GAOptions()),
+            graph=small_graph())
+
+
+# ---------------------------------------------------------------------------
+# determinism (the reproducibility contract serialization promises)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,options", [
+    ("ga", GAOptions(population=20)),
+    ("sa", SAOptions()),
+])
+def test_same_spec_same_result(strategy, options):
+    hw = HWSpace(mode="shared",
+                 base=AcceleratorConfig(glb_bytes=128 * KB,
+                                        wbuf_bytes=144 * KB))
+    spec = fixed_spec(strategy=strategy, options=options, hw=hw,
+                      sample_budget=300)
+    a = run(spec, graph=small_graph())
+    b = run(ExploreSpec.from_json(spec.to_json()), graph=small_graph())
+    assert a.cost == b.cost
+    assert a.groups == b.groups
+    assert a.acc == b.acc
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_partition_only_shim_still_works():
+    with pytest.deprecated_call():
+        res = partition_only(small_graph(), sample_budget=200, population=10,
+                             seed=0)
+    assert isinstance(res, CoccoResult)
+    assert res.plan.feasible
+    costs = [c for _, c in res.history]
+    assert all(b <= a + 1e-9 for a, b in zip(costs, costs[1:]))
+
+
+def test_co_explore_shim_matches_new_api():
+    g1, g2 = small_graph(), small_graph()
+    with pytest.deprecated_call():
+        old = co_explore(g1, mode="shared", metric="energy", alpha=0.002,
+                         sample_budget=300, population=20, seed=1)
+    new = run(ExploreSpec(workload="dd", strategy="ga",
+                          objective=Objective(metric="energy", alpha=0.002),
+                          hw=HWSpace(mode="shared"),
+                          sample_budget=300, seed=1,
+                          options=GAOptions(population=20)),
+              graph=g2)
+    assert old.cost == new.cost
+    assert old.groups == new.groups
+    assert old.acc == new.acc

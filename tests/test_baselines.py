@@ -14,7 +14,7 @@ from repro.core.baselines import (
 )
 from repro.core.ga import HWSpace
 from repro.core import partition_only
-from tests.test_partition_ga import small_graph
+from conftest import small_graph
 
 KB = 1 << 10
 

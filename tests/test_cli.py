@@ -1,0 +1,95 @@
+"""`python -m repro` CLI: explore / compare / spec+result artifacts."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.api import ExploreResult, ExploreSpec
+from repro.api.cli import main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_compare_smoke(capsys):
+    rc = main(["compare", "--workload", "vgg16",
+               "--strategies", "greedy,dp,ga",
+               "--budget", "300", "--opt", "population=10"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.strip()]
+    header = lines[0].split()
+    assert header[:3] == ["rank", "strategy", "cost"]
+    body = "\n".join(lines[1:])
+    for name in ("greedy", "dp", "ga"):
+        assert name in body
+    assert "best:" in out
+
+
+def test_explore_writes_artifacts(tmp_path, capsys):
+    out_path = tmp_path / "result.json"
+    spec_path = tmp_path / "spec.json"
+    rc = main(["explore", "--workload", "vgg16", "--strategy", "greedy",
+               "--save-spec", str(spec_path), "--out", str(out_path)])
+    assert rc == 0
+    assert "vgg16[greedy]" in capsys.readouterr().out
+
+    spec = ExploreSpec.from_json(spec_path.read_text())
+    assert spec.workload == "vgg16" and spec.strategy == "greedy"
+
+    res = ExploreResult.from_json(out_path.read_text())
+    assert res.feasible
+    assert res.spec == spec
+
+
+def test_explore_from_spec_file_reproduces(tmp_path, capsys):
+    spec_path = tmp_path / "spec.json"
+    out_a = tmp_path / "a.json"
+    out_b = tmp_path / "b.json"
+    assert main(["explore", "--workload", "vgg16", "--strategy", "ga",
+                 "--budget", "200", "--opt", "population=10",
+                 "--save-spec", str(spec_path), "--out", str(out_a)]) == 0
+    assert main(["explore", "--spec", str(spec_path),
+                 "--out", str(out_b)]) == 0
+    a = ExploreResult.from_json(out_a.read_text())
+    b = ExploreResult.from_json(out_b.read_text())
+    assert a.cost == b.cost
+    assert a.groups == b.groups
+
+
+def test_compare_out_is_ranked_json(tmp_path, capsys):
+    out_path = tmp_path / "cmp.json"
+    rc = main(["compare", "--workload", "vgg16", "--strategies", "greedy,dp",
+               "--out", str(out_path)])
+    assert rc == 0
+    rows = json.loads(out_path.read_text())
+    assert len(rows) == 2
+    costs = [r["cost"] for r in rows]
+    assert costs == sorted(costs)
+    # each row is a loadable ExploreResult
+    for r in rows:
+        assert ExploreResult.from_dict(r).feasible
+
+
+def test_bad_arguments_exit_nonzero():
+    with pytest.raises(SystemExit):
+        main(["explore"])                      # neither --spec nor --workload
+    with pytest.raises(SystemExit):
+        main(["explore", "--workload", "vgg16", "--strategy", "nope"])
+    with pytest.raises(SystemExit):
+        main(["explore", "--workload", "vgg16", "--opt", "population"])
+
+
+def test_module_entrypoint_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "compare", "--workload", "vgg16",
+         "--strategies", "greedy,dp", "--budget", "200"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "rank" in proc.stdout and "best:" in proc.stdout

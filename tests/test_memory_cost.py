@@ -13,7 +13,7 @@ from repro.core import (
     subgraph_footprint,
 )
 from repro.core.netlib import resnet50, vgg16
-from tests.test_simulate import chain_graph
+from conftest import chain_graph
 
 MB = 1 << 20
 KB = 1 << 10

@@ -3,8 +3,8 @@
 import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
+from conftest import small_graph
 
 from repro.core import (
     AcceleratorConfig,
@@ -28,19 +28,6 @@ from repro.core.netlib import googlenet, resnet50
 
 KB = 1 << 10
 MB = 1 << 20
-
-
-def small_graph():
-    """A 8-node two-diamond graph."""
-    g = Graph("dd")
-    n = [g.add_node(f"n{i}", 32, 16, weight_bytes=256, macs=10_000)
-         for i in range(8)]
-    edges = [(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5), (4, 6), (5, 7),
-             (6, 7)]
-    for a, b in edges:
-        g.add_edge(n[a], n[b], F=1, s=1)
-    g.nodes[n[7]].is_output = True
-    return g
 
 
 def test_validity_checks():

@@ -3,26 +3,10 @@ correctness, full reuse, capacity sufficiency, and tightness."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
+from conftest import chain_graph, fig5_like_graph
 
 from repro.core import DeadlockError, FULL, Graph, derive_schedule, simulate_subgraph
-from tests.test_tiling import fig5_like_graph
-
-
-def chain_graph(length=64, specs=((3, 1), (3, 2), (2, 1))):
-    g = Graph("chain")
-    prev = g.add_node("in", length, 1)
-    nodes = []
-    cur = length
-    for i, (F, s) in enumerate(specs):
-        cur = (cur - F) // s + 1
-        idx = g.add_node(f"l{i}", cur, 1)
-        g.add_edge(prev, idx, F=F, s=s)
-        nodes.append(idx)
-        prev = idx
-    g.nodes[prev].is_output = True
-    return g, set(nodes)
 
 
 def test_chain_executes_correctly_with_derived_capacity():

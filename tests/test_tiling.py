@@ -4,34 +4,11 @@ import math
 from fractions import Fraction
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
+from conftest import fig5_like_graph
 
 from repro.core import FULL, Graph, derive_schedule, sequential_graph
 from repro.core.tiling import production_centric_footprint
-
-
-def fig5_like_graph():
-    """A 1D two-input diamond with heterogeneous kernels/strides, in the
-    spirit of the paper's Fig. 5 example: output nodes drive backward
-    derivation with LCM alignment."""
-    g = Graph("fig5")
-    n_m2 = g.add_node("in-2", out_len=64, line_bytes=1)       # input node -2
-    n_m1 = g.add_node("in-1", out_len=33, line_bytes=1)       # input node -1
-    n0 = g.add_node("n0", out_len=30, line_bytes=1)           # F=4, s=2 on in-2
-    n1 = g.add_node("n1", out_len=31, line_bytes=1)           # F=3/s=2 ; F=3/s=1
-    n2 = g.add_node("n2", out_len=31, line_bytes=1)           # F=3, s=1 on in-1
-    n3 = g.add_node("n3", out_len=30, line_bytes=1, is_output=True)
-    n4 = g.add_node("n4", out_len=30, line_bytes=1, is_output=True)
-    g.add_edge(n_m2, n0, F=4, s=2)
-    g.add_edge(n_m2, n1, F=3, s=2)
-    g.add_edge(n_m1, n1, F=3, s=1)   # n1 merges two inputs (strides 2 and 1)
-    g.add_edge(n_m1, n2, F=3, s=1)
-    g.add_edge(n0, n3, F=1, s=1)
-    g.add_edge(n1, n3, F=2, s=1)
-    g.add_edge(n1, n4, F=2, s=1)
-    g.add_edge(n2, n4, F=2, s=1)
-    return g, (n_m2, n_m1, n0, n1, n2, n3, n4)
 
 
 def test_chain_backward_derivation():
