@@ -3,8 +3,10 @@ Irregular-NN DP, and exact enumeration (small models only), normalized to
 greedy.  Claims validated: Cocco matches the enumeration optimum on small
 models and beats greedy/DP on the large irregular ones.
 
-All methods run through the unified exploration API (one ExploreSpec per
-model, one shared CachedEvaluator, strategies from the registry)."""
+All methods run through the unified exploration API as one spec batch per
+model (`compare_cached`): every leg is a fully-specified ExploreSpec, so the
+sweep is spec-addressed in the result store and resumable, and the legs fan
+out over worker processes under ``--jobs``."""
 
 from __future__ import annotations
 
@@ -16,7 +18,6 @@ from repro.api import (
     ExploreSpec,
     GAOptions,
     GreedyOptions,
-    run,
 )
 from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
 from repro.core.netlib import build
@@ -29,6 +30,7 @@ from .common import (
     POPULATION,
     SMALL_MODELS,
     Timer,
+    compare_cached,
     emit,
 )
 
@@ -45,35 +47,44 @@ def run_model(name: str, samples: int) -> Dict:
         sample_budget=samples,
         seed=0,
     )
-    out: Dict[str, Dict] = {}
+    specs = [
+        replace(base, strategy="greedy",
+                options=GreedyOptions(eval_budget=GREEDY_EVALS)),
+        replace(base, strategy="dp", options=None),
+    ]
+    if name in ENUM_MODELS:
+        specs.append(replace(base, strategy="enum",
+                             options=EnumOptions(state_budget=ENUM_STATES)))
+    # paper §4.3 benefit 4 — "flexible initialization": seed the GA with the
+    # other optimizers' results and finetune.  seed_from keeps the seeding
+    # inside the spec, so this leg is store-addressable like the rest; the
+    # seeds re-run dp/greedy with *default* options, which in reduced mode
+    # are >= this benchmark's budgets (so Cocco >= both baselines below and
+    # the WARN never fires).  In FULL mode the reported greedy is unbounded
+    # while the seed greedy is budget-capped — there the GA's own 400k
+    # samples, not the seed, carry the paper's claim, and the WARN check
+    # still guards the result.
+    specs.append(replace(base, strategy="ga",
+                         options=GAOptions(population=POPULATION,
+                                           seed_from=("dp", "greedy"))))
+    results = {r.strategy: r for r in compare_cached(base, specs,
+                                                     graph=g, ev=ev)}
 
-    greedy = run(replace(base, strategy="greedy",
-                         options=GreedyOptions(eval_budget=GREEDY_EVALS)),
-                 graph=g, ev=ev)
+    out: Dict[str, Dict] = {}
+    greedy = results["greedy"]
     out["greedy"] = {"ema": greedy.plan.ema_total,
                      "bw": greedy.plan.avg_bandwidth()}
-
-    dp = run(replace(base, strategy="dp", options=None), graph=g, ev=ev)
+    dp = results["dp"]
     out["dp"] = {"ema": dp.plan.ema_total, "bw": dp.plan.avg_bandwidth()}
-
     if name in ENUM_MODELS:
-        er = run(replace(base, strategy="enum",
-                         options=EnumOptions(state_budget=ENUM_STATES)),
-                 graph=g, ev=ev)
+        er = results["enum"]
         if er.meta["complete"] and er.plan is not None:
             out["enum"] = {"ema": er.plan.ema_total,
                            "bw": er.plan.avg_bandwidth()}
         else:
             out["enum"] = {"ema": None, "bw": None,
                            "note": f"budget exceeded ({er.meta['states']} states)"}
-
-    # paper §4.3 benefit 4 — "flexible initialization": seed the GA with the
-    # other optimizers' results and finetune (guarantees Cocco >= baselines
-    # even at reduced sample budgets; random-only init needs the paper's
-    # 400k-sample budget to dominate on the 200+-node irregular graphs)
-    cocco = run(replace(base, strategy="ga",
-                        options=GAOptions(population=POPULATION)),
-                graph=g, ev=ev, init_groups=[dp.groups, greedy.groups])
+    cocco = results["ga"]
     out["cocco"] = {"ema": cocco.plan.ema_total,
                     "bw": cocco.plan.avg_bandwidth(),
                     "subgraphs": cocco.n_subgraphs}

@@ -2,7 +2,9 @@
 distribution over generations), Fig. 14 (alpha sweep: capacity vs energy).
 
 Cocco, SA, and the two-step schemes all run as registry strategies on one
-shared-buffer ExploreSpec per model."""
+shared-buffer ExploreSpec per model; every run goes through the sweep-wide
+result store (resumable) and each model's strategy batch fans out over
+``--jobs`` worker processes."""
 
 from __future__ import annotations
 
@@ -11,11 +13,18 @@ import os
 from dataclasses import replace
 from typing import Dict, List
 
-from repro.api import ExploreSpec, GAOptions, TwoStepOptions, run
+from repro.api import ExploreSpec, GAOptions, TwoStepOptions
 from repro.core import HWSpace, Objective
 from repro.core.netlib import build
 
-from .common import COOPT_SAMPLES, POPULATION, Timer, emit
+from .common import (
+    COOPT_SAMPLES,
+    POPULATION,
+    Timer,
+    compare_cached,
+    emit,
+    run_cached,
+)
 
 FIG12_MODELS = ["resnet50", "googlenet", "randwire_a"]
 ALPHAS = [0.0005, 0.002, 0.008, 0.032]
@@ -46,18 +55,23 @@ def run_fig12(samples: int = COOPT_SAMPLES) -> Dict:
     for name in FIG12_MODELS:
         g = build(name)
         spec = coopt_spec(name, samples)
-        curves = {}
-        curves["cocco"] = downsample(run(spec, graph=g).history)
-        curves["sa"] = downsample(
-            run(replace(spec, strategy="sa", options=None), graph=g).history)
-        for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
-            ts = run(replace(spec, strategy="two_step",
-                             options=TwoStepOptions(
-                                 sampler=sampler, capacity_samples=4,
-                                 samples_per_capacity=max(samples // 4, 500))),
-                     graph=g)
-            curves[tag] = downsample(ts.history)
-        out[name] = curves
+        two_step = {
+            tag: replace(spec, strategy="two_step",
+                         options=TwoStepOptions(
+                             sampler=sampler, capacity_samples=4,
+                             samples_per_capacity=max(samples // 4, 500)))
+            for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid"))
+        }
+        batch = compare_cached(
+            spec,
+            [spec, replace(spec, strategy="sa", options=None),
+             two_step["rs_ga"], two_step["gs_ga"]],
+            graph=g)
+        cocco, sa, rs, gs = batch
+        out[name] = {"cocco": downsample(cocco.history),
+                     "sa": downsample(sa.history),
+                     "rs_ga": downsample(rs.history),
+                     "gs_ga": downsample(gs.history)}
     return out
 
 
@@ -65,7 +79,7 @@ def run_fig13(samples: int = COOPT_SAMPLES) -> Dict:
     spec = replace(coopt_spec("resnet50", samples),
                    options=GAOptions(population=POPULATION,
                                      log_populations=True))
-    res = run(spec)
+    res = run_cached(spec)
     return {"resnet50": [[list(p) for p in gen]
                          for gen in res.population_log[:20]]}
 
@@ -74,10 +88,11 @@ def run_fig14(samples: int = COOPT_SAMPLES) -> Dict:
     out = {}
     for name in ("resnet50", "googlenet", "randwire_a", "nasnet"):
         g = build(name)
+        specs = [coopt_spec(name, max(samples // 2, 1000), alpha=alpha)
+                 for alpha in ALPHAS]
         rows = []
-        for alpha in ALPHAS:
-            res = run(coopt_spec(name, max(samples // 2, 1000), alpha=alpha),
-                      graph=g)
+        for alpha, res in zip(ALPHAS,
+                              compare_cached(specs[0], specs, graph=g)):
             rows.append({"alpha": alpha,
                          "capacity_kb": res.acc.glb_bytes // 1024,
                          "energy_pj": res.plan.energy_pj})

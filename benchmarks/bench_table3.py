@@ -9,11 +9,18 @@ from __future__ import annotations
 
 from typing import Dict
 
-from repro.api import ExploreSpec, GAOptions, run
+from repro.api import ExploreSpec, GAOptions
 from repro.core import AcceleratorConfig, HWSpace, Objective
 from repro.core.netlib import build
 
-from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
+from .common import (
+    COOPT_MODELS,
+    COOPT_SAMPLES,
+    POPULATION,
+    Timer,
+    compare_cached,
+    emit,
+)
 
 CORES = (1, 2, 4)
 BATCHES = (1, 2, 8)
@@ -45,20 +52,25 @@ def run_all(samples: int = COOPT_SAMPLES) -> Dict:
     out = {}
     for name in COOPT_MODELS:
         g = build(name)
-        rows = {}
-        for n in CORES:
-            base = AcceleratorConfig(shared=True, weight_share_cores=n,
-                                     n_cores=n)
-            spec = ExploreSpec(
+        # one spec per core count; the batch is store-addressed and runs in
+        # parallel under --jobs
+        specs = [
+            ExploreSpec(
                 workload=name,
                 strategy="ga",
                 objective=Objective(metric="energy", alpha=0.002),
-                hw=HWSpace(mode="shared", base=base),
+                hw=HWSpace(mode="shared",
+                           base=AcceleratorConfig(shared=True,
+                                                  weight_share_cores=n,
+                                                  n_cores=n)),
                 sample_budget=max(samples // 2, 1000),
                 seed=0,
                 options=GAOptions(population=POPULATION),
             )
-            res = run(spec, graph=g)
+            for n in CORES
+        ]
+        rows = {}
+        for n, res in zip(CORES, compare_cached(specs[0], specs, graph=g)):
             for b in BATCHES:
                 m = table3_metrics(res.plan, res.acc, n, b)
                 m["size_kb"] = res.acc.glb_bytes // 1024

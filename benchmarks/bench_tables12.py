@@ -4,18 +4,28 @@ co-opt SA and Cocco.  Cost = Formula 2 (BUF_SIZE + alpha * energy),
 alpha = 0.002, energy metric.  Claim: co-opt (Cocco) <= two-step <= fixed.
 
 Every method is a registry strategy on the same ExploreSpec family, with one
-shared CachedEvaluator per model."""
+shared CachedEvaluator per model.  Each model runs as two spec batches
+(the HW searches, then the partition-only final-cost runs at every chosen
+hardware point), so the whole table is store-addressed/resumable and
+parallel under ``--jobs``."""
 
 from __future__ import annotations
 
 from dataclasses import replace
 from typing import Dict
 
-from repro.api import ExploreSpec, GAOptions, TwoStepOptions, run
+from repro.api import ExploreSpec, GAOptions, TwoStepOptions
 from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
 from repro.core.netlib import build
 
-from .common import COOPT_MODELS, COOPT_SAMPLES, POPULATION, Timer, emit
+from .common import (
+    COOPT_MODELS,
+    COOPT_SAMPLES,
+    POPULATION,
+    Timer,
+    compare_cached,
+    emit,
+)
 
 KB = 1024
 ALPHA = 0.002
@@ -27,10 +37,9 @@ FIXED = {
 }
 
 
-def final_cost(g, acc, ev, samples) -> float:
-    """Paper §5.3.1: after choosing HW, run partition-only and report
-    Formula-2 cost at that hardware point."""
-    spec = ExploreSpec(
+def part_spec(g, acc, samples) -> ExploreSpec:
+    """Paper §5.3.1: after choosing HW, run partition-only at that point."""
+    return ExploreSpec(
         workload=g.name,
         strategy="ga",
         objective=Objective(metric="energy", alpha=None),
@@ -39,8 +48,6 @@ def final_cost(g, acc, ev, samples) -> float:
         seed=1,
         options=GAOptions(population=POPULATION),
     )
-    res = run(spec, graph=g, ev=ev)
-    return acc.buf_size_total + ALPHA * res.plan.energy_pj
 
 
 def run_model(name: str, mode: str, samples: int) -> Dict:
@@ -55,38 +62,43 @@ def run_model(name: str, mode: str, samples: int) -> Dict:
         seed=4,
         options=GAOptions(population=POPULATION),
     )
-    out: Dict[str, Dict] = {}
     part_budget = max(samples // 2, 1000)
 
-    for tag, (a, w) in FIXED[mode].items():
-        acc = AcceleratorConfig(glb_bytes=a, wbuf_bytes=w,
-                                shared=(mode == "shared"))
-        out[f"fixed_{tag}"] = {
-            "glb_kb": a // KB, "wbuf_kb": w // KB,
-            "cost": final_cost(g, acc, ev, part_budget),
+    # phase 1: the hardware searches (two-step x2, SA, Cocco) as one batch
+    search_specs = {
+        "rs_ga": replace(coopt, strategy="two_step", seed=2,
+                         options=TwoStepOptions(
+                             sampler="random", capacity_samples=4,
+                             samples_per_capacity=max(samples // 4, 500))),
+        "gs_ga": replace(coopt, strategy="two_step", seed=2,
+                         options=TwoStepOptions(
+                             sampler="grid", capacity_samples=4,
+                             samples_per_capacity=max(samples // 4, 500))),
+        "sa": replace(coopt, strategy="sa", seed=3, options=None),
+        "cocco": coopt,
+    }
+    searched = dict(zip(search_specs,
+                        compare_cached(coopt, list(search_specs.values()),
+                                       graph=g, ev=ev)))
+
+    # phase 2: Formula-2 final cost at every chosen hardware point
+    accs = {
+        f"fixed_{tag}": AcceleratorConfig(glb_bytes=a, wbuf_bytes=w,
+                                          shared=(mode == "shared"))
+        for tag, (a, w) in FIXED[mode].items()
+    }
+    accs.update({tag: res.acc for tag, res in searched.items()})
+    final_specs = [part_spec(g, acc, part_budget) for acc in accs.values()]
+    finals = dict(zip(accs, compare_cached(final_specs[0], final_specs,
+                                           graph=g, ev=ev)))
+
+    out: Dict[str, Dict] = {}
+    for tag, acc in accs.items():
+        out[tag] = {
+            "glb_kb": acc.glb_bytes // KB,
+            "wbuf_kb": acc.wbuf_bytes // KB,
+            "cost": acc.buf_size_total + ALPHA * finals[tag].plan.energy_pj,
         }
-
-    for tag, sampler in (("rs_ga", "random"), ("gs_ga", "grid")):
-        res = run(replace(coopt, strategy="two_step", seed=2,
-                          options=TwoStepOptions(
-                              sampler=sampler, capacity_samples=4,
-                              samples_per_capacity=max(samples // 4, 500))),
-                  graph=g)
-        acc = res.acc
-        out[tag] = {"glb_kb": acc.glb_bytes // KB,
-                    "wbuf_kb": acc.wbuf_bytes // KB,
-                    "cost": final_cost(g, acc, ev, part_budget)}
-
-    res = run(replace(coopt, strategy="sa", seed=3, options=None),
-              graph=g, ev=ev)
-    out["sa"] = {"glb_kb": res.acc.glb_bytes // KB,
-                 "wbuf_kb": res.acc.wbuf_bytes // KB,
-                 "cost": final_cost(g, res.acc, ev, part_budget)}
-
-    cres = run(coopt, graph=g, ev=ev)
-    out["cocco"] = {"glb_kb": cres.acc.glb_bytes // KB,
-                    "wbuf_kb": cres.acc.wbuf_bytes // KB,
-                    "cost": final_cost(g, cres.acc, ev, part_budget)}
     return out
 
 

@@ -3,6 +3,13 @@
 Budgets default to a reduced mode so `python -m benchmarks.run` finishes on a
 laptop; set REPRO_BENCH_FULL=1 to use the paper's sample counts (400k
 partition / 50k co-opt samples).
+
+The partition benchmarks run every search through :func:`run_cached` /
+:func:`compare_cached`, which honor the orchestrator's ``--store-dir`` /
+``--jobs`` / ``--no-store`` flags (see :func:`configure`): with a store
+configured, an interrupted sweep resumes from the already-searched specs
+instead of re-searching them, and independent strategy runs fan out over
+worker processes.
 """
 
 from __future__ import annotations
@@ -10,9 +17,37 @@ from __future__ import annotations
 import os
 import time
 from contextlib import contextmanager
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.api import ExploreResult, ExploreSpec, ResultStore
+from repro.api import compare as api_compare
+from repro.api import run as api_run
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# process-wide sweep configuration, set once by benchmarks.run (or by tests)
+STORE: Optional[ResultStore] = None
+JOBS: int = 1
+
+
+def configure(store_dir: Optional[str] = None, jobs: int = 1) -> None:
+    """Point every subsequent run_cached/compare_cached at one store/pool."""
+    global STORE, JOBS
+    STORE = ResultStore(store_dir) if store_dir else None
+    JOBS = max(1, jobs)
+
+
+def run_cached(spec: ExploreSpec, graph=None, ev=None) -> ExploreResult:
+    """`repro.api.run` against the sweep-wide result store."""
+    return api_run(spec, graph=graph, ev=ev, store=STORE)
+
+
+def compare_cached(spec: ExploreSpec,
+                   strategies: Sequence[Union[str, ExploreSpec]],
+                   graph=None, ev=None) -> List[ExploreResult]:
+    """`repro.api.compare` with the sweep-wide store and process pool."""
+    return api_compare(spec, strategies, graph=graph, ev=ev,
+                       jobs=JOBS, store=STORE)
 
 PARTITION_SAMPLES = 400_000 if FULL else 2_500
 COOPT_SAMPLES = 50_000 if FULL else 1_500

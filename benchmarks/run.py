@@ -2,14 +2,22 @@
 """Benchmark orchestrator.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig11,...]
+        [--store-dir runs/store] [--jobs N] [--no-store]
 
 Reduced sample budgets by default (REPRO_BENCH_FULL=1 for the paper's
 400k/50k budgets).  Emits `name,us_per_call,derived` CSV rows.
+
+``--store-dir`` (default ``runs/store``, or ``$REPRO_STORE_DIR``) keeps a
+spec-addressed cache of every search the partition benchmarks perform, so an
+interrupted sweep — or a re-run to re-plot — replays finished specs from disk
+instead of re-searching; ``--no-store`` disables it.  ``--jobs N`` runs
+independent strategies of one benchmark point in N worker processes.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -35,10 +43,22 @@ BENCHES = {
 
 
 def main() -> None:
+    from . import common
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--store-dir",
+                    default=os.environ.get("REPRO_STORE_DIR", "runs/store"),
+                    help="spec-addressed result store for resumable sweeps "
+                         "(default: runs/store)")
+    ap.add_argument("--no-store", action="store_true",
+                    help="always search from scratch")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for independent strategy runs")
     args = ap.parse_args()
+    common.configure(store_dir=None if args.no_store else args.store_dir,
+                     jobs=args.jobs)
     names = list(BENCHES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0
@@ -52,6 +72,8 @@ def main() -> None:
                   f"{type(e).__name__}: {e}")
             traceback.print_exc()
         print(f"{name}.total,{(time.time() - t0) * 1e6:.0f},done")
+    if common.STORE is not None:
+        print(f"# {common.STORE.stats()}")
     if failures:
         raise SystemExit(1)
 

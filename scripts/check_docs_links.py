@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Docs link-check: every relative link/anchor in the markdown docs must
+resolve, so README/docs can't rot silently as the tree moves.
+
+Checks, for README.md and docs/*.md:
+
+* ``[text](target)`` links — relative targets must exist on disk (external
+  ``http(s)://`` links are not fetched); ``#fragment`` anchors into a
+  markdown file must match one of its headings (GitHub slug rules,
+  simplified).
+* paths the prose names in backticks that look like repo paths
+  (``src/...``, ``docs/...``, ``benchmarks/...``, ...) must exist.
+
+Exit 0 when everything resolves, 1 with a per-problem report otherwise.
+Stdlib only — runs anywhere the repo checks out.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `backticked` repo paths: at least one slash, rooted at a known top-level dir
+CODEPATH_RE = re.compile(
+    r"`((?:src|docs|benchmarks|tests|examples|scripts|\.github)/[^`\s]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    slug = heading.strip().lower()
+    slug = re.sub(r"[`*_]", "", slug)
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    return {github_slug(h) for h in HEADING_RE.findall(md_path.read_text())}
+
+
+def check_file(doc: Path) -> list:
+    problems = []
+    text = doc.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        resolved = (doc.parent / path_part).resolve() if path_part else doc
+        if not resolved.exists():
+            problems.append(f"{doc.relative_to(REPO)}: broken link {target!r}")
+            continue
+        if fragment and resolved.suffix == ".md":
+            if github_slug(fragment) not in anchors_of(resolved):
+                problems.append(
+                    f"{doc.relative_to(REPO)}: bad anchor {target!r}")
+    for codepath in CODEPATH_RE.findall(text):
+        # prose may name a path with trailing decorations; strip them
+        candidate = REPO / codepath.rstrip("/").split(" ")[0]
+        if not candidate.exists():
+            problems.append(
+                f"{doc.relative_to(REPO)}: named path `{codepath}` missing")
+    return problems
+
+
+def main() -> int:
+    missing_docs = [d for d in DOC_FILES if not d.exists()]
+    if missing_docs:
+        for d in missing_docs:
+            print(f"missing doc file: {d.relative_to(REPO)}")
+        return 1
+    problems = [p for doc in DOC_FILES for p in check_file(doc)]
+    for p in problems:
+        print(p)
+    print(f"checked {len(DOC_FILES)} files: "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

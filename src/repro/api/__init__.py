@@ -13,7 +13,9 @@ Specs and results round-trip losslessly through JSON
 (``spec == ExploreSpec.from_json(spec.to_json())``), so any run can be
 archived, shared, and reproduced bit-for-bit from its artifact.  Use
 :func:`compare` to run several strategies on one spec with a shared cost
-evaluator, and :func:`register_strategy` to plug in new methods.
+evaluator (``jobs=N`` fans them out over worker processes), a
+:class:`ResultStore` to make re-runs of any already-searched spec instant,
+and :func:`register_strategy` to plug in new methods.
 """
 
 from .registry import (
@@ -33,6 +35,7 @@ from .spec import (
     TwoStepOptions,
 )
 from .result import ExploreResult
+from .store import ResultStore, spec_key
 from .strategies import build_workload, compare, plan_tpu, run
 
 __all__ = [
@@ -42,6 +45,7 @@ __all__ = [
     "ExploreSpec",
     "GAOptions",
     "GreedyOptions",
+    "ResultStore",
     "SAOptions",
     "Strategy",
     "StrategyEntry",
@@ -53,4 +57,5 @@ __all__ = [
     "plan_tpu",
     "register_strategy",
     "run",
+    "spec_key",
 ]

@@ -5,14 +5,20 @@ Subcommands:
 * ``explore``   — run one strategy on one workload; print the summary and
                   optionally write the spec/result as JSON artifacts.
 * ``compare``   — run several strategies on the same spec (one shared cost
-                  evaluator) and print a ranked table.
+                  evaluator, optionally ``--jobs N`` worker processes) and
+                  print a ranked table.
 * ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
+
+``--store-dir`` (or ``$REPRO_STORE_DIR``) points both ``explore`` and
+``compare`` at a spec-addressed result store: a spec that was already
+searched replays its archived result instantly instead of re-searching.
 
 Examples::
 
     python -m repro explore --workload resnet50 --strategy ga \
         --metric energy --alpha 0.002 --hw-mode shared --budget 4000
-    python -m repro compare --workload vgg16 --strategies greedy,dp,ga
+    python -m repro compare --workload vgg16 --strategies greedy,dp,ga \
+        --jobs 4 --store-dir runs/store
     python -m repro plan-tpu --arch glm4-9b --samples 2000
 """
 
@@ -20,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any, Dict, List, Optional
 
@@ -28,6 +35,7 @@ from repro.core.ga import HWSpace, Objective
 from .registry import list_strategies, options_class_for
 from .result import ExploreResult
 from .spec import ExploreSpec
+from .store import ResultStore
 from .strategies import compare, plan_tpu, run
 
 
@@ -74,6 +82,14 @@ def _maybe_save(path: Optional[str], payload: str) -> None:
             f.write(payload)
 
 
+def _store_from_args(args: argparse.Namespace) -> Optional[ResultStore]:
+    """Resolve --store-dir / --no-store / $REPRO_STORE_DIR to a store."""
+    if args.no_store:
+        return None
+    store_dir = args.store_dir or os.environ.get("REPRO_STORE_DIR")
+    return ResultStore(store_dir) if store_dir else None
+
+
 def _result_row(res: ExploreResult) -> Dict[str, str]:
     plan = res.plan
     return {
@@ -99,12 +115,15 @@ def _print_table(rows: List[Dict[str, str]]) -> None:
 def cmd_explore(args: argparse.Namespace) -> int:
     spec = _spec_from_args(args)
     _maybe_save(args.save_spec, spec.to_json(indent=2))
-    res = run(spec)
+    store = _store_from_args(args)
+    res = run(spec, store=store)
     print(res.summary())
     if res.history:
         print(f"  converged: cost {res.history[0][1]:.4g} -> "
               f"{res.history[-1][1]:.4g} over {res.samples} samples "
               f"({res.evaluations} cost-model evals)")
+    if store is not None:
+        print(f"  {store.stats()}")
     _maybe_save(args.out, res.to_json(indent=2))
     if args.out:
         print(f"  result written to {args.out}")
@@ -117,11 +136,14 @@ def cmd_compare(args: argparse.Namespace) -> int:
     names = [s.strip() for s in args.strategies.split(",") if s.strip()]
     if not names:
         raise SystemExit("--strategies needs at least one strategy name")
-    results = compare(spec, names)
+    store = _store_from_args(args)
+    results = compare(spec, names, jobs=args.jobs, store=store)
     ranked = sorted(results, key=lambda r: r.cost)
     _print_table([_result_row(r) for r in ranked])
     best = ranked[0]
     print(f"\nbest: {best.summary()}")
+    if store is not None:
+        print(store.stats())
     _maybe_save(args.out,
                 json.dumps([r.to_dict() for r in ranked], indent=2))
     return 0
@@ -158,6 +180,14 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                    help="strategy option override, e.g. --opt population=40")
     p.add_argument("--save-spec", metavar="PATH",
                    help="write the resolved ExploreSpec JSON here")
+    p.add_argument("--store-dir", metavar="DIR",
+                   default=None,
+                   help="spec-addressed result store: re-running an "
+                        "already-searched spec replays the archived result "
+                        "(default: $REPRO_STORE_DIR if set)")
+    p.add_argument("--no-store", action="store_true",
+                   help="ignore --store-dir/$REPRO_STORE_DIR and always "
+                        "search from scratch")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -177,6 +207,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_spec_args(pc)
     pc.add_argument("--strategies", default="greedy,dp,ga",
                     help="comma-separated strategy names")
+    pc.add_argument("--jobs", type=int, default=1,
+                    help="run strategies in N worker processes "
+                         "(results are identical to the serial path)")
     pc.add_argument("--out", metavar="PATH",
                     help="write all ExploreResult JSONs here (a list)")
     pc.set_defaults(fn=cmd_compare)

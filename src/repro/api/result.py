@@ -46,7 +46,28 @@ def plan_from_dict(d: Optional[Dict[str, Any]]) -> Optional[PlanCost]:
 
 @dataclass
 class ExploreResult:
-    """What :func:`repro.api.run` returns for every strategy."""
+    """What :func:`repro.api.run` returns for every strategy.
+
+    Field semantics worth pinning down:
+
+    * ``samples`` — how many candidate *plans* the strategy considered (GA/SA
+      genomes, greedy merge attempts, enum states, ...); the x-axis of
+      ``history``.
+    * ``evaluations`` — how many **distinct** cost-model queries the run
+      issued: unique (subgraph node-set, hardware-point) pairs sent to the
+      :class:`~repro.core.cost.CachedEvaluator`, *including* nested
+      sub-searches (a ``seed_from`` GA's baseline runs, ``two_step``'s
+      per-capacity inner GAs).  Distinct queries — not raw cache misses — so
+      the number does not depend on evaluator cache warmth: a strategy
+      reports the same ``evaluations`` whether it ran alone, after other
+      strategies on a shared evaluator (serial :func:`repro.api.compare`),
+      or in a cold worker process (``compare(jobs=N)``).  A run replayed
+      from a :class:`~repro.api.store.ResultStore` returns the archived
+      result unchanged, so this field then reports the original search's
+      count even though no new evaluation happened.
+    * ``cost`` — ``objective.cost(plan, acc)``; ``math.inf`` when no feasible
+      plan was found (then ``plan`` is ``None``).
+    """
 
     workload: str
     strategy: str

@@ -1,0 +1,166 @@
+"""`ResultStore`: a spec-addressed, on-disk cache of :class:`ExploreResult`.
+
+Every entry is one JSON artifact named by the SHA-256 of the canonical
+serialization of its :class:`ExploreSpec` plus the strategy name, so a run is
+addressed purely by *what was asked for*: re-invoking the same spec hits the
+store and returns the archived result instantly instead of re-searching.
+This is what lets ``python -m repro compare --store-dir ...`` and the
+benchmark sweeps (`python -m benchmarks.run`) resume after an interrupt —
+completed (workload, strategy, budget, seed, ...) points are replayed from
+disk, and only the missing ones search.
+
+Design notes:
+
+* Keys are content hashes of ``ExploreSpec.to_dict()`` rendered as canonical
+  JSON (sorted keys, minimal separators), so they are stable across
+  processes, machines, and Python versions.
+* Writes are atomic (temp file + ``os.replace``), so concurrent workers of a
+  parallel ``compare`` may race on the same key and still leave a valid
+  entry — both sides write equal bytes for a deterministic strategy.
+* Reads are defensive: an entry that fails to parse, fails to validate,
+  carries a different ``RESULT_VERSION``, or was written for a different
+  spec (hash tampering, manual edits) is quarantined to
+  ``<key>.json.corrupt`` and treated as a miss, after which the caller
+  re-searches and overwrites it with a fresh artifact.
+* The address covers the *spec*, not the code: artifacts written before an
+  edit to the cost model or a strategy still hit afterwards.  Clear the
+  store directory (or pass ``--no-store``) after changing search/cost
+  code, the same way you would invalidate any other build cache.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional, Union
+
+from .result import RESULT_VERSION, ExploreResult
+from .spec import ExploreSpec
+
+
+def graph_fingerprint(g) -> str:
+    """Cheap structural digest of a :class:`~repro.core.graph.Graph`.
+
+    Stamped into stored results and checked on replay, so two different
+    graphs sharing a workload label (custom graphs passed via ``graph=``)
+    cannot serve each other's cached artifacts.
+    """
+    h = hashlib.sha256()
+    for n in g.nodes:
+        h.update(f"{n.idx},{n.out_len},{n.line_bytes},{n.weight_bytes},"
+                 f"{n.macs},{n.is_output};".encode())
+    for e in g.edges:
+        h.update(f"{e.src},{e.dst},{e.F},{e.s},{e.kind};".encode())
+    return h.hexdigest()
+
+
+def spec_key(spec: ExploreSpec) -> str:
+    """SHA-256 content hash addressing ``spec``'s result in a store.
+
+    Hashes the canonical JSON of the spec (which embeds the strategy and its
+    typed options) plus the strategy name as a domain separator.  Stable
+    across processes: two workers hashing equal specs get equal keys.
+    """
+    canonical = json.dumps(spec.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+    h = hashlib.sha256()
+    h.update(canonical.encode("utf-8"))
+    h.update(b"\x00")
+    h.update(spec.strategy.encode("utf-8"))
+    return h.hexdigest()
+
+
+class ResultStore:
+    """Directory of spec-addressed ``ExploreResult`` JSON artifacts."""
+
+    def __init__(self, root: Union[str, Path]) -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    # -- addressing -------------------------------------------------------
+    def path_for(self, spec: ExploreSpec) -> Path:
+        return self.root / f"{spec_key(spec)}.json"
+
+    def __contains__(self, spec: ExploreSpec) -> bool:
+        return self.path_for(spec).exists()
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.json"))
+
+    # -- read / write -----------------------------------------------------
+    def get(self, spec: ExploreSpec) -> Optional[ExploreResult]:
+        """Return the archived result for ``spec``, or ``None`` on a miss.
+
+        A corrupt or mismatched entry is quarantined (renamed to
+        ``*.json.corrupt``) and reported as a miss so the caller re-searches.
+        """
+        path = self.path_for(spec)
+        try:
+            payload = path.read_text()
+        except OSError:
+            self.misses += 1
+            return None
+        try:
+            d = json.loads(payload)
+            if d.get("version") != RESULT_VERSION:
+                raise ValueError(
+                    f"artifact version {d.get('version')!r} != "
+                    f"{RESULT_VERSION} (written by an older layout)")
+            result = ExploreResult.from_dict(d)
+        except (ValueError, KeyError, TypeError) as err:
+            self._quarantine(path, reason=str(err))
+            self.misses += 1
+            return None
+        if result.spec is not None and result.spec != spec:
+            self._quarantine(path, reason="stored spec != requested spec")
+            self.misses += 1
+            return None
+        self.hits += 1
+        return result
+
+    def put(self, spec: ExploreSpec, result: ExploreResult) -> Path:
+        """Atomically persist ``result`` under ``spec``'s key."""
+        if result.spec is None:
+            result.spec = spec
+        path = self.path_for(spec)
+        fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".tmp-",
+                                   suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(result.to_json(indent=2))
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    # -- maintenance ------------------------------------------------------
+    def _quarantine(self, path: Path, reason: str) -> None:
+        try:
+            path.replace(path.with_suffix(".json.corrupt"))
+        except OSError:
+            pass  # another process may have quarantined/overwritten it
+
+    def clear(self) -> int:
+        """Delete every entry (incl. quarantined ones); returns the count."""
+        n = 0
+        for p in list(self.root.glob("*.json")) + \
+                list(self.root.glob("*.json.corrupt")):
+            try:
+                p.unlink()
+                n += 1
+            except OSError:
+                pass
+        return n
+
+    def stats(self) -> str:
+        return (f"store[{self.root}]: {self.hits} hits, "
+                f"{self.misses} misses, {len(self)} entries")

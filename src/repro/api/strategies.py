@@ -17,8 +17,9 @@ Fixed-hardware methods (``greedy``/``dp``/``enum``) evaluate at
 from __future__ import annotations
 
 import math
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import replace
-from typing import Iterable, List, Optional, Sequence, Set
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
 from repro.core.baselines import (
     dp_partition,
@@ -27,7 +28,7 @@ from repro.core.baselines import (
     run_sa,
     run_two_step,
 )
-from repro.core.cost import CachedEvaluator, PlanCost
+from repro.core.cost import CachedEvaluator, PlanCost, SubgraphCost
 from repro.core.ga import SearchResult, run_ga
 from repro.core.graph import Graph
 
@@ -42,6 +43,7 @@ from .spec import (
     SAOptions,
     TwoStepOptions,
 )
+from .store import ResultStore, graph_fingerprint, spec_key
 
 
 def build_workload(name: str) -> Graph:
@@ -63,14 +65,34 @@ def build_workload(name: str) -> Graph:
 
 
 def run(spec: ExploreSpec, graph: Optional[Graph] = None,
-        ev: Optional[CachedEvaluator] = None, **runtime) -> ExploreResult:
+        ev: Optional[CachedEvaluator] = None,
+        store: Optional[ResultStore] = None, **runtime) -> ExploreResult:
     """Run ``spec.strategy`` on ``spec`` and return an :class:`ExploreResult`.
 
     ``graph`` overrides workload-name resolution (for custom graphs);
     ``ev`` shares one :class:`CachedEvaluator` across calls (e.g. from
-    :func:`compare`).  ``runtime`` carries non-serializable extras a strategy
-    may accept (the GA takes ``init_groups``).
+    :func:`compare`).  ``store`` consults a spec-addressed
+    :class:`~repro.api.store.ResultStore` first and persists the result on a
+    miss; it is bypassed when ``runtime`` extras are passed, because those
+    are not part of the spec and the result would not be reproducible from
+    its address.  ``runtime`` carries non-serializable extras a strategy may
+    accept (the GA takes ``init_groups``).
+
+    ``result.evaluations`` is set here, uniformly for every strategy, to the
+    number of *distinct* (subgraph, hardware-point) cost-model queries the
+    strategy issued — see :class:`ExploreResult` for the exact semantics.
     """
+    use_store = store is not None and not runtime
+    if use_store:
+        cached = store.get(spec)
+        if cached is not None:
+            # a custom graph= shares only the workload *label* with the
+            # spec; refuse another graph's artifact (store keys carry no
+            # graph identity)
+            if (graph is None
+                    or cached.meta.get("graph_sha")
+                    in (None, graph_fingerprint(graph))):
+                return cached
     g = graph if graph is not None else build_workload(spec.workload)
     ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
     entry = get_strategy(spec.strategy)
@@ -83,29 +105,134 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             f"strategy {spec.strategy!r} expects options of type "
             f"{entry.options_cls.__name__}, got {type(options).__name__}"
         )
-    result = entry.fn(spec, options, g, ev, **runtime)
+    with ev.count_run() as touched:
+        result = entry.fn(spec, options, g, ev, **runtime)
+    result.evaluations = len(touched)
     result.spec = spec
     result.meta.setdefault("graph", g.name)
+    result.meta.setdefault("graph_sha", graph_fingerprint(g))
+    if use_store:
+        store.put(spec, result)
     return result
 
 
-def compare(spec: ExploreSpec, strategies: Optional[Iterable[str]] = None,
-            graph: Optional[Graph] = None,
-            ev: Optional[CachedEvaluator] = None) -> List[ExploreResult]:
-    """Run several strategies on one spec, sharing a single evaluator.
+def _resolve_compare_specs(
+    spec: ExploreSpec,
+    strategies: Optional[Iterable[Union[str, ExploreSpec]]],
+) -> List[ExploreSpec]:
+    items = list(strategies) if strategies is not None else list_strategies()
+    subs: List[ExploreSpec] = []
+    for item in items:
+        if isinstance(item, ExploreSpec):
+            if (item.workload != spec.workload
+                    or item.out_tile != spec.out_tile):
+                raise ValueError(
+                    "compare() spec items must share the primary spec's "
+                    f"workload/out_tile; got {item.workload!r}/"
+                    f"{item.out_tile} vs {spec.workload!r}/{spec.out_tile}")
+            subs.append(item)
+        else:
+            subs.append(spec if item == spec.strategy
+                        else replace(spec, strategy=item, options=None))
+    return subs
 
-    Strategies other than ``spec.strategy`` run with their default options.
-    Returns results in the order given (rank by ``cost`` to get a table).
+
+def compare(spec: ExploreSpec,
+            strategies: Optional[Iterable[Union[str, ExploreSpec]]] = None,
+            graph: Optional[Graph] = None,
+            ev: Optional[CachedEvaluator] = None,
+            jobs: int = 1,
+            store: Optional[ResultStore] = None) -> List[ExploreResult]:
+    """Run several strategies on one spec, sharing a single evaluator cache.
+
+    ``strategies`` items are strategy names (run with their default options,
+    except ``spec.strategy`` which keeps ``spec.options``) or fully-formed
+    :class:`ExploreSpec` variants sharing the primary spec's workload (for
+    per-strategy budgets/options, as the benchmarks do).  Returns results in
+    the order given (rank by ``cost`` to get a table).
+
+    ``jobs > 1`` runs the strategies in worker processes via
+    :class:`~concurrent.futures.ProcessPoolExecutor`: each worker searches
+    against a cold per-worker :class:`CachedEvaluator` whose entries are
+    merged back into ``ev`` on join.  Because every strategy is
+    deterministic given its spec and evaluation counts are cache-warmth
+    independent, the parallel path returns bitwise-identical results to the
+    serial path.  Strategies registered at import time (the built-ins, or
+    anything importable from the worker) are supported; with the ``fork``
+    start method (Linux default) runtime-registered strategies work too.
+
+    ``store`` serves store hits in the parent without spawning a worker and
+    persists every miss, so an interrupted comparison resumes where it
+    stopped.
     """
-    names = list(strategies) if strategies is not None else list_strategies()
+    subs = _resolve_compare_specs(spec, strategies)
     g = graph if graph is not None else build_workload(spec.workload)
     ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
-    results = []
-    for name in names:
-        sub = spec if name == spec.strategy else replace(
-            spec, strategy=name, options=None)
-        results.append(run(sub, graph=g, ev=ev))
-    return results
+    if jobs and jobs > 1 and len(subs) > 1:
+        return _compare_parallel(subs, g, ev, jobs, store)
+    return [run(sub, graph=g, ev=ev, store=store) for sub in subs]
+
+
+def _compare_worker(
+    spec_json: str, graph: Optional[Graph], store_dir: Optional[str],
+) -> Tuple[ExploreResult, Dict[Tuple, SubgraphCost]]:
+    """Top-level (picklable) worker: run one spec on a cold evaluator.
+
+    Returns the result plus the worker evaluator's memo table so the parent
+    can merge it (``CachedEvaluator.merge_cache``) and later serial runs
+    still benefit from the work done in workers.
+    """
+    spec = ExploreSpec.from_json(spec_json)
+    g = graph if graph is not None else build_workload(spec.workload)
+    ev = CachedEvaluator(g, out_tile=spec.out_tile)
+    worker_store = ResultStore(store_dir) if store_dir else None
+    result = run(spec, graph=g, ev=ev, store=worker_store)
+    return result, ev.cache_snapshot()
+
+
+def _compare_parallel(subs: List[ExploreSpec], g: Graph,
+                      ev: CachedEvaluator, jobs: int,
+                      store: Optional[ResultStore]) -> List[ExploreResult]:
+    results: List[Optional[ExploreResult]] = [None] * len(subs)
+    pending = list(range(len(subs)))
+    if store is not None:
+        g_sha = graph_fingerprint(g)
+        missing = []
+        for i in pending:
+            cached = store.get(subs[i])
+            if cached is not None and cached.meta.get("graph_sha") in (None,
+                                                                       g_sha):
+                results[i] = cached
+            else:
+                missing.append(i)
+        pending = missing
+    # identical specs in one batch (e.g. two searches that chose the same
+    # hardware point) search once and share the result
+    first_of: Dict[str, int] = {}
+    duplicates: Dict[int, int] = {}
+    unique = []
+    for i in pending:
+        key = spec_key(subs[i])
+        if key in first_of:
+            duplicates[i] = first_of[key]
+        else:
+            first_of[key] = i
+            unique.append(i)
+    if unique:
+        store_dir = str(store.root) if store is not None else None
+        with ProcessPoolExecutor(
+                max_workers=min(jobs, len(unique))) as pool:
+            futures = {
+                pool.submit(_compare_worker, subs[i].to_json(), g, store_dir):
+                i for i in unique
+            }
+            for fut in as_completed(futures):
+                result, cache = fut.result()
+                results[futures[fut]] = result
+                ev.merge_cache(cache)
+    for i, j in duplicates.items():
+        results[i] = results[j]
+    return [r for r in results if r is not None]
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +240,9 @@ def compare(spec: ExploreSpec, strategies: Optional[Iterable[str]] = None,
 # ---------------------------------------------------------------------------
 
 def _from_search(spec: ExploreSpec, res: SearchResult,
-                 evaluations: int, **meta) -> ExploreResult:
+                 **meta) -> ExploreResult:
+    # ``evaluations`` is left 0 here: run() overwrites it uniformly with the
+    # distinct-query count of the whole strategy invocation
     best = res.best
     return ExploreResult(
         workload=spec.workload,
@@ -125,15 +254,13 @@ def _from_search(spec: ExploreSpec, res: SearchResult,
         objective=spec.objective,
         history=res.history,
         samples=res.samples,
-        evaluations=evaluations,
         population_log=res.population_log,
         meta=dict(meta),
     )
 
 
 def _fixed_point(spec: ExploreSpec, groups: Sequence[Set[int]],
-                 plan: PlanCost, n_eval: int,
-                 evaluations: int, **meta) -> ExploreResult:
+                 plan: PlanCost, n_eval: int, **meta) -> ExploreResult:
     acc = spec.hw.base
     cost = spec.objective.cost(plan, acc)
     return ExploreResult(
@@ -146,7 +273,6 @@ def _fixed_point(spec: ExploreSpec, groups: Sequence[Set[int]],
         objective=spec.objective,
         history=[(max(n_eval, 1), cost)],
         samples=n_eval,
-        evaluations=evaluations,
         meta=dict(meta),
     )
 
@@ -158,7 +284,6 @@ def _fixed_point(spec: ExploreSpec, groups: Sequence[Set[int]],
 @register_strategy("ga", GAOptions)
 def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
                  ev: CachedEvaluator, init_groups=None) -> ExploreResult:
-    ev0 = ev.evaluations
     seeds = [list(gr) for gr in init_groups] if init_groups else []
     for name in opts.seed_from:
         if name == spec.strategy:
@@ -181,33 +306,29 @@ def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
         log_populations=opts.log_populations,
         ev=ev,
     )
-    return _from_search(spec, res, ev.evaluations - ev0,
-                        seeded_from=list(opts.seed_from))
+    return _from_search(spec, res, seeded_from=list(opts.seed_from))
 
 
 @register_strategy("greedy", GreedyOptions)
 def _strategy_greedy(spec: ExploreSpec, opts: GreedyOptions, g: Graph,
                      ev: CachedEvaluator) -> ExploreResult:
-    ev0 = ev.evaluations
     groups, plan, n_eval = greedy_partition(
         g, spec.hw.base, spec.objective, out_tile=spec.out_tile, ev=ev,
         eval_budget=opts.eval_budget)
-    return _fixed_point(spec, groups, plan, n_eval, ev.evaluations - ev0)
+    return _fixed_point(spec, groups, plan, n_eval)
 
 
 @register_strategy("dp", DPOptions)
 def _strategy_dp(spec: ExploreSpec, opts: DPOptions, g: Graph,
                  ev: CachedEvaluator) -> ExploreResult:
-    ev0 = ev.evaluations
     groups, plan, n_eval = dp_partition(
         g, spec.hw.base, spec.objective, out_tile=spec.out_tile, ev=ev)
-    return _fixed_point(spec, groups, plan, n_eval, ev.evaluations - ev0)
+    return _fixed_point(spec, groups, plan, n_eval)
 
 
 @register_strategy("enum", EnumOptions)
 def _strategy_enum(spec: ExploreSpec, opts: EnumOptions, g: Graph,
                    ev: CachedEvaluator) -> ExploreResult:
-    ev0 = ev.evaluations
     er = enumerate_partitions(
         g, spec.hw.base, spec.objective, out_tile=spec.out_tile,
         state_budget=opts.state_budget, ev=ev)
@@ -217,32 +338,31 @@ def _strategy_enum(spec: ExploreSpec, opts: EnumOptions, g: Graph,
             workload=spec.workload, strategy=spec.strategy, groups=[],
             acc=spec.hw.base, plan=None, cost=math.inf,
             objective=spec.objective, history=[], samples=er.states,
-            evaluations=ev.evaluations - ev0, meta=meta)
-    return _fixed_point(spec, er.groups, er.plan, er.states,
-                        ev.evaluations - ev0, **meta)
+            meta=meta)
+    return _fixed_point(spec, er.groups, er.plan, er.states, **meta)
 
 
 @register_strategy("sa", SAOptions)
 def _strategy_sa(spec: ExploreSpec, opts: SAOptions, g: Graph,
                  ev: CachedEvaluator) -> ExploreResult:
-    ev0 = ev.evaluations
     res = run_sa(
         g, spec.objective, spec.hw, sample_budget=spec.sample_budget,
         t0=opts.t0, t_end=opts.t_end, seed=spec.seed,
         out_tile=spec.out_tile, ev=ev)
-    return _from_search(spec, res, ev.evaluations - ev0)
+    return _from_search(spec, res)
 
 
 @register_strategy("two_step", TwoStepOptions)
 def _strategy_two_step(spec: ExploreSpec, opts: TwoStepOptions, g: Graph,
                        ev: CachedEvaluator) -> ExploreResult:
+    # the shared evaluator now flows into the per-capacity inner GA runs, so
+    # their queries are counted (and cached) like every other strategy's
     res = run_two_step(
         g, spec.objective, spec.hw, sampler=opts.sampler,
         capacity_samples=opts.capacity_samples,
         samples_per_capacity=opts.samples_per_capacity,
-        seed=spec.seed, out_tile=spec.out_tile)
-    # two-step runs its own per-capacity evaluators; report their total
-    return _from_search(spec, res, res.evaluations, sampler=opts.sampler)
+        seed=spec.seed, out_tile=spec.out_tile, ev=ev)
+    return _from_search(spec, res, sampler=opts.sampler)
 
 
 # ---------------------------------------------------------------------------

@@ -306,9 +306,18 @@ def run_two_step(
     samples_per_capacity: int = 5_000,
     seed: int = 0,
     out_tile: int = 1,
+    ev: Optional[CachedEvaluator] = None,
 ) -> SearchResult:
-    """Decoupled capacity search then partition-only GA per capacity."""
+    """Decoupled capacity search then partition-only GA per capacity.
+
+    ``ev`` shares one :class:`CachedEvaluator` across the per-capacity GA
+    runs (cache keys include the hardware point, so entries never collide);
+    the returned ``evaluations`` is the number of cache misses this call
+    incurred, whichever evaluator was used.
+    """
     rng = random.Random(seed)
+    ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    ev_start = ev.evaluations
     if hw.mode == "fixed":
         # degenerate: the single capacity is the base point itself
         picks = [(hw.base.glb_bytes, hw.base.wbuf_bytes)]
@@ -328,7 +337,6 @@ def run_two_step(
     best: Optional[Genome] = None
     history: List[Tuple[int, float]] = []
     samples = 0
-    evals = 0
     running = math.inf
     for (glb, wb) in picks:
         shared = hw.base.shared if hw.mode == "fixed" else hw.mode == "shared"
@@ -338,8 +346,8 @@ def run_two_step(
             sample_budget=samples_per_capacity,
             population=min(100, max(10, samples_per_capacity // 5)),
             seed=rng.randrange(1 << 30), out_tile=out_tile,
+            ev=ev,
         )
-        evals += res.evaluations
         for (_, c) in res.history:
             samples += 1
             running = min(running, c)
@@ -347,4 +355,5 @@ def run_two_step(
         if best is None or res.best.cost < best.cost:
             best = res.best
     return SearchResult(best=best, history=history, population_log=[],
-                        samples=samples, evaluations=evals)
+                        samples=samples,
+                        evaluations=ev.evaluations - ev_start)

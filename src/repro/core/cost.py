@@ -24,8 +24,9 @@ ARM-memory-compiler-style sqrt model) + MAC energy.
 from __future__ import annotations
 
 import math
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Set, Tuple
 
 from .graph import FULL, Graph
 from .memory import subgraph_footprint
@@ -278,6 +279,8 @@ class CachedEvaluator:
         self._cache: Dict[Tuple, SubgraphCost] = {}
         self.evaluations = 0   # cache misses (true cost-model invocations)
         self.lookups = 0
+        self.merged = 0        # entries adopted from other evaluators
+        self._run_scopes: List[Set[Tuple]] = []
 
     def _key(self, nodes: frozenset, acc: AcceleratorConfig) -> Tuple:
         return (nodes, acc.glb_bytes, acc.wbuf_bytes, acc.shared,
@@ -287,12 +290,53 @@ class CachedEvaluator:
         fs = frozenset(nodes)
         key = self._key(fs, acc)
         self.lookups += 1
+        for scope in self._run_scopes:
+            scope.add(key)
         hit = self._cache.get(key)
         if hit is None:
             hit = evaluate_subgraph(self.g, set(fs), acc, out_tile=self.out_tile)
             self._cache[key] = hit
             self.evaluations += 1
         return hit
+
+    @contextmanager
+    def count_run(self) -> Iterator[Set[Tuple]]:
+        """Track the *distinct* (subgraph, hardware-point) queries of one run.
+
+        Unlike ``evaluations`` (raw cache misses, which shrink as the cache
+        warms), the yielded set has the same size however warm the cache is —
+        so a strategy's reported evaluation count is identical whether it runs
+        alone, after other strategies on a shared evaluator, or in a cold
+        worker process.  Scopes nest: an inner run's queries also count toward
+        every enclosing scope.
+        """
+        touched: Set[Tuple] = set()
+        self._run_scopes.append(touched)
+        try:
+            yield touched
+        finally:
+            # pop by position, not value: nested scope sets can be *equal*
+            # (same keys), and scopes unwind strictly LIFO
+            assert self._run_scopes[-1] is touched
+            self._run_scopes.pop()
+
+    def merge_cache(self, entries: Mapping[Tuple, SubgraphCost]) -> int:
+        """Adopt another evaluator's cache entries (parallel-worker join).
+
+        Existing keys win (the cost model is deterministic, so both sides
+        hold equal values anyway).  Returns the number of new entries.
+        """
+        added = 0
+        for key, val in entries.items():
+            if key not in self._cache:
+                self._cache[key] = val
+                added += 1
+        self.merged += added
+        return added
+
+    def cache_snapshot(self) -> Dict[Tuple, SubgraphCost]:
+        """Picklable copy of the memo table, for cross-process merging."""
+        return dict(self._cache)
 
     def plan(self, groups: Sequence[Set[int]], acc: AcceleratorConfig) -> PlanCost:
         return PlanCost(
