@@ -19,7 +19,7 @@ from repro.api import (
     GAOptions,
     GreedyOptions,
 )
-from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
+from repro.core import AcceleratorConfig, HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import (
@@ -32,6 +32,7 @@ from .common import (
     Timer,
     compare_cached,
     emit,
+    new_evaluator,
 )
 
 ENUM_MODELS = {"vgg16", "resnet50", "googlenet", "nasnet"}
@@ -39,7 +40,7 @@ ENUM_MODELS = {"vgg16", "resnet50", "googlenet", "nasnet"}
 
 def run_model(name: str, samples: int) -> Dict:
     g = build(name)
-    ev = CachedEvaluator(g)
+    ev = new_evaluator(g)
     base = ExploreSpec(
         workload=name,
         objective=Objective(metric="ema", alpha=None),
@@ -67,8 +68,11 @@ def run_model(name: str, samples: int) -> Dict:
     specs.append(replace(base, strategy="ga",
                          options=GAOptions(population=POPULATION,
                                            seed_from=("dp", "greedy"))))
-    results = {r.strategy: r for r in compare_cached(base, specs,
-                                                     graph=g, ev=ev)}
+    try:
+        results = {r.strategy: r for r in compare_cached(base, specs,
+                                                         graph=g, ev=ev)}
+    finally:
+        ev.close()  # release --eval-jobs worker pools between models
 
     out: Dict[str, Dict] = {}
     greedy = results["greedy"]

@@ -15,7 +15,7 @@ from dataclasses import replace
 from typing import Dict
 
 from repro.api import ExploreSpec, GAOptions, TwoStepOptions
-from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
+from repro.core import AcceleratorConfig, HWSpace, Objective
 from repro.core.netlib import build
 
 from .common import (
@@ -25,6 +25,7 @@ from .common import (
     Timer,
     compare_cached,
     emit,
+    new_evaluator,
 )
 
 KB = 1024
@@ -52,9 +53,16 @@ def part_spec(g, acc, samples) -> ExploreSpec:
 
 def run_model(name: str, mode: str, samples: int) -> Dict:
     g = build(name)
-    ev = CachedEvaluator(g)
+    ev = new_evaluator(g)
+    try:
+        return _run_model(g, ev, mode, samples)
+    finally:
+        ev.close()  # release --eval-jobs worker pools between models
+
+
+def _run_model(g, ev, mode: str, samples: int) -> Dict:
     coopt = ExploreSpec(
-        workload=name,
+        workload=g.name,
         strategy="ga",
         objective=Objective(metric="energy", alpha=ALPHA),
         hw=HWSpace(mode=mode),

@@ -28,18 +28,40 @@ FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 # process-wide sweep configuration, set once by benchmarks.run (or by tests)
 STORE: Optional[ResultStore] = None
 JOBS: int = 1
+EVAL_JOBS: int = 1
+EVAL_BACKEND: Optional[str] = None
 
 
-def configure(store_dir: Optional[str] = None, jobs: int = 1) -> None:
-    """Point every subsequent run_cached/compare_cached at one store/pool."""
-    global STORE, JOBS
+def configure(store_dir: Optional[str] = None, jobs: int = 1,
+              eval_jobs: int = 1,
+              eval_backend: Optional[str] = None) -> None:
+    """Point every subsequent run_cached/compare_cached at one store/pool.
+
+    ``jobs`` fans out whole strategies; ``eval_jobs``/``eval_backend``
+    parallelize cost evaluation *within* one strategy through the
+    evaluation engine (`repro.core.engine`) — results are identical either
+    way, so both axes are safe under the result store.
+    """
+    global STORE, JOBS, EVAL_JOBS, EVAL_BACKEND
     STORE = ResultStore(store_dir) if store_dir else None
     JOBS = max(1, jobs)
+    EVAL_JOBS = max(1, eval_jobs)
+    EVAL_BACKEND = eval_backend
+
+
+def new_evaluator(g, out_tile: int = 1):
+    """A `CachedEvaluator` wired to the sweep-wide evaluation backend."""
+    from repro.core.cost import CachedEvaluator
+    from repro.core.engine import make_executor
+
+    return CachedEvaluator(g, out_tile=out_tile,
+                           executor=make_executor(EVAL_BACKEND, EVAL_JOBS))
 
 
 def run_cached(spec: ExploreSpec, graph=None, ev=None) -> ExploreResult:
     """`repro.api.run` against the sweep-wide result store."""
-    return api_run(spec, graph=graph, ev=ev, store=STORE)
+    return api_run(spec, graph=graph, ev=ev, store=STORE,
+                   eval_jobs=EVAL_JOBS, eval_backend=EVAL_BACKEND)
 
 
 def compare_cached(spec: ExploreSpec,
@@ -47,7 +69,8 @@ def compare_cached(spec: ExploreSpec,
                    graph=None, ev=None) -> List[ExploreResult]:
     """`repro.api.compare` with the sweep-wide store and process pool."""
     return api_compare(spec, strategies, graph=graph, ev=ev,
-                       jobs=JOBS, store=STORE)
+                       jobs=JOBS, store=STORE,
+                       eval_jobs=EVAL_JOBS, eval_backend=EVAL_BACKEND)
 
 PARTITION_SAMPLES = 400_000 if FULL else 2_500
 COOPT_SAMPLES = 50_000 if FULL else 1_500

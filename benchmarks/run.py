@@ -3,6 +3,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig11,...]
         [--store-dir runs/store] [--jobs N] [--no-store]
+        [--eval-jobs N] [--eval-backend serial|process|vector]
 
 Reduced sample budgets by default (REPRO_BENCH_FULL=1 for the paper's
 400k/50k budgets).  Emits `name,us_per_call,derived` CSV rows.
@@ -56,9 +57,17 @@ def main() -> None:
                     help="always search from scratch")
     ap.add_argument("--jobs", type=int, default=1,
                     help="worker processes for independent strategy runs")
+    ap.add_argument("--eval-jobs", type=int, default=1,
+                    help="evaluation-engine workers for batched cost "
+                         "queries within one strategy")
+    ap.add_argument("--eval-backend", default=None,
+                    choices=["serial", "process", "vector"],
+                    help="evaluation-engine executor (default: process "
+                         "when --eval-jobs > 1, else serial)")
     args = ap.parse_args()
     common.configure(store_dir=None if args.no_store else args.store_dir,
-                     jobs=args.jobs)
+                     jobs=args.jobs, eval_jobs=args.eval_jobs,
+                     eval_backend=args.eval_backend)
     names = list(BENCHES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0

@@ -35,7 +35,7 @@ from .spec import (
     TwoStepOptions,
 )
 from .result import ExploreResult
-from .store import ResultStore, spec_key
+from .store import ResultStore, StoreEntry, spec_key
 from .strategies import build_workload, compare, plan_tpu, run
 
 __all__ = [
@@ -47,6 +47,7 @@ __all__ = [
     "GreedyOptions",
     "ResultStore",
     "SAOptions",
+    "StoreEntry",
     "Strategy",
     "StrategyEntry",
     "TwoStepOptions",

@@ -7,18 +7,25 @@ Subcommands:
 * ``compare``   — run several strategies on the same spec (one shared cost
                   evaluator, optionally ``--jobs N`` worker processes) and
                   print a ranked table.
+* ``store``     — ``ls`` the spec-addressed result store, or ``gc`` it down
+                  to a byte cap (LRU by artifact mtime).
 * ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
 
 ``--store-dir`` (or ``$REPRO_STORE_DIR``) points both ``explore`` and
 ``compare`` at a spec-addressed result store: a spec that was already
 searched replays its archived result instantly instead of re-searching.
+``--eval-jobs N`` / ``--eval-backend`` parallelize cost evaluation *within*
+one strategy through the evaluation engine (``repro.core.engine``); every
+backend returns identical results.
 
 Examples::
 
     python -m repro explore --workload resnet50 --strategy ga \
-        --metric energy --alpha 0.002 --hw-mode shared --budget 4000
+        --metric energy --alpha 0.002 --hw-mode shared --budget 4000 \
+        --eval-jobs 4
     python -m repro compare --workload vgg16 --strategies greedy,dp,ga \
         --jobs 4 --store-dir runs/store
+    python -m repro store gc --store-dir runs/store --max-bytes 100000000
     python -m repro plan-tpu --arch glm4-9b --samples 2000
 """
 
@@ -116,7 +123,8 @@ def cmd_explore(args: argparse.Namespace) -> int:
     spec = _spec_from_args(args)
     _maybe_save(args.save_spec, spec.to_json(indent=2))
     store = _store_from_args(args)
-    res = run(spec, store=store)
+    res = run(spec, store=store, eval_backend=args.eval_backend,
+              eval_jobs=args.eval_jobs)
     print(res.summary())
     if res.history:
         print(f"  converged: cost {res.history[0][1]:.4g} -> "
@@ -137,7 +145,9 @@ def cmd_compare(args: argparse.Namespace) -> int:
     if not names:
         raise SystemExit("--strategies needs at least one strategy name")
     store = _store_from_args(args)
-    results = compare(spec, names, jobs=args.jobs, store=store)
+    results = compare(spec, names, jobs=args.jobs, store=store,
+                      eval_backend=args.eval_backend,
+                      eval_jobs=args.eval_jobs)
     ranked = sorted(results, key=lambda r: r.cost)
     _print_table([_result_row(r) for r in ranked])
     best = ranked[0]
@@ -146,6 +156,51 @@ def cmd_compare(args: argparse.Namespace) -> int:
         print(store.stats())
     _maybe_save(args.out,
                 json.dumps([r.to_dict() for r in ranked], indent=2))
+    return 0
+
+
+def _store_for_maintenance(args: argparse.Namespace) -> ResultStore:
+    store_dir = args.store_dir or os.environ.get("REPRO_STORE_DIR")
+    if not store_dir:
+        raise SystemExit(
+            "store maintenance needs --store-dir (or $REPRO_STORE_DIR)")
+    return ResultStore(store_dir)
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GB"
+
+
+def cmd_store_ls(args: argparse.Namespace) -> int:
+    import datetime
+
+    store = _store_for_maintenance(args)
+    entries = store.entries()
+    rows = [{
+        "key": e.key[:16],
+        "workload": e.workload or "?",
+        "strategy": e.strategy or "?",
+        "size": _fmt_bytes(e.size),
+        "mtime": datetime.datetime.fromtimestamp(e.mtime)
+                 .strftime("%Y-%m-%d %H:%M:%S"),
+    } for e in entries]
+    if rows:
+        _print_table(rows)
+    total = sum(e.size for e in entries)
+    print(f"\n{len(entries)} entries, {_fmt_bytes(total)} in {store.root}")
+    return 0
+
+
+def cmd_store_gc(args: argparse.Namespace) -> int:
+    store = _store_for_maintenance(args)
+    removed, freed = store.gc(args.max_bytes)
+    print(f"store[{store.root}]: evicted {removed} entries "
+          f"({_fmt_bytes(freed)}), {_fmt_bytes(store.total_bytes())} of "
+          f"{_fmt_bytes(args.max_bytes)} cap in use")
     return 0
 
 
@@ -188,6 +243,14 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--no-store", action="store_true",
                    help="ignore --store-dir/$REPRO_STORE_DIR and always "
                         "search from scratch")
+    p.add_argument("--eval-jobs", type=int, default=1,
+                   help="evaluation-engine workers for batched cost queries "
+                        "within one strategy (results are identical to "
+                        "serial evaluation)")
+    p.add_argument("--eval-backend", default=None,
+                   choices=["serial", "process", "vector"],
+                   help="evaluation-engine executor (default: process when "
+                        "--eval-jobs > 1, else serial)")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -213,6 +276,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     pc.add_argument("--out", metavar="PATH",
                     help="write all ExploreResult JSONs here (a list)")
     pc.set_defaults(fn=cmd_compare)
+
+    ps = sub.add_parser("store",
+                        help="inspect / garbage-collect a result store")
+    store_sub = ps.add_subparsers(dest="store_cmd", required=True)
+    psl = store_sub.add_parser("ls", help="list store entries (LRU first)")
+    psl.add_argument("--store-dir", default=None,
+                     help="store directory (default: $REPRO_STORE_DIR)")
+    psl.set_defaults(fn=cmd_store_ls)
+    psg = store_sub.add_parser(
+        "gc", help="evict least-recently-written entries down to a size cap")
+    psg.add_argument("--store-dir", default=None,
+                     help="store directory (default: $REPRO_STORE_DIR)")
+    psg.add_argument("--max-bytes", type=int, required=True,
+                     help="keep at most this many bytes of artifacts")
+    psg.set_defaults(fn=cmd_store_gc)
 
     pt = sub.add_parser("plan-tpu",
                         help="Cocco as the TPU execution planner")

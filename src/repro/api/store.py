@@ -34,8 +34,9 @@ import hashlib
 import json
 import os
 import tempfile
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Optional, Union
+from typing import List, Optional, Tuple, Union
 
 from .result import RESULT_VERSION, ExploreResult
 from .spec import ExploreSpec
@@ -71,6 +72,18 @@ def spec_key(spec: ExploreSpec) -> str:
     h.update(b"\x00")
     h.update(spec.strategy.encode("utf-8"))
     return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class StoreEntry:
+    """One ``store ls`` row: artifact path, key, size, write time, labels."""
+
+    path: Path
+    key: str
+    size: int
+    mtime: float
+    workload: str = ""
+    strategy: str = ""
 
 
 class ResultStore:
@@ -143,6 +156,69 @@ class ResultStore:
         return path
 
     # -- maintenance ------------------------------------------------------
+    def entries(self, peek: bool = True) -> List["StoreEntry"]:
+        """Every artifact in the store, oldest mtime first (LRU order).
+
+        With ``peek`` (the ``store ls`` path), ``workload``/``strategy``
+        are best-effort reads from the artifact (empty strings for
+        unreadable/corrupt entries); ``peek=False`` stays stat-only so
+        ``gc``/``total_bytes`` never parse artifact JSON.
+        """
+        out: List[StoreEntry] = []
+        for p in self.root.glob("*.json"):
+            try:
+                st = p.stat()
+            except OSError:
+                continue  # raced with a concurrent gc/clear
+            workload = strategy = ""
+            if peek:
+                try:
+                    d = json.loads(p.read_text())
+                    workload = str(d.get("workload", ""))
+                    strategy = str(d.get("strategy", ""))
+                except (OSError, ValueError):
+                    pass
+            out.append(StoreEntry(path=p, key=p.stem, size=st.st_size,
+                                  mtime=st.st_mtime, workload=workload,
+                                  strategy=strategy))
+        out.sort(key=lambda e: (e.mtime, e.key))
+        return out
+
+    def total_bytes(self) -> int:
+        return sum(e.size for e in self.entries(peek=False))
+
+    def gc(self, max_bytes: int) -> Tuple[int, int]:
+        """Evict least-recently-written artifacts until the store holds at
+        most ``max_bytes``.  Returns ``(entries_removed, bytes_freed)``.
+
+        LRU by artifact mtime: a replayed spec does not refresh its mtime,
+        so this is strictly write-recency — good enough for the sweep
+        workloads the store serves (ROADMAP: cross-run eviction/GC).
+        Quarantined ``*.json.corrupt`` files are always removed.
+        """
+        removed = freed = 0
+        for p in self.root.glob("*.json.corrupt"):
+            try:
+                size = p.stat().st_size
+                p.unlink()
+                removed += 1
+                freed += size
+            except OSError:
+                pass
+        entries = self.entries(peek=False)
+        total = sum(e.size for e in entries)
+        for e in entries:
+            if total <= max_bytes:
+                break
+            try:
+                e.path.unlink()
+            except OSError:
+                continue  # another process beat us to it
+            total -= e.size
+            removed += 1
+            freed += e.size
+        return removed, freed
+
     def _quarantine(self, path: Path, reason: str) -> None:
         try:
             path.replace(path.with_suffix(".json.corrupt"))

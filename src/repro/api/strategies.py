@@ -64,9 +64,20 @@ def build_workload(name: str) -> Graph:
         ) from err
 
 
+def _make_evaluator(g: Graph, out_tile: int, eval_backend: Optional[str],
+                    eval_jobs: int) -> CachedEvaluator:
+    """Build an evaluator whose executor matches the requested backend."""
+    from repro.core.engine import make_executor
+
+    return CachedEvaluator(g, out_tile=out_tile,
+                           executor=make_executor(eval_backend, eval_jobs))
+
+
 def run(spec: ExploreSpec, graph: Optional[Graph] = None,
         ev: Optional[CachedEvaluator] = None,
-        store: Optional[ResultStore] = None, **runtime) -> ExploreResult:
+        store: Optional[ResultStore] = None,
+        eval_backend: Optional[str] = None, eval_jobs: int = 1,
+        **runtime) -> ExploreResult:
     """Run ``spec.strategy`` on ``spec`` and return an :class:`ExploreResult`.
 
     ``graph`` overrides workload-name resolution (for custom graphs);
@@ -77,6 +88,15 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
     are not part of the spec and the result would not be reproducible from
     its address.  ``runtime`` carries non-serializable extras a strategy may
     accept (the GA takes ``init_groups``).
+
+    ``eval_backend``/``eval_jobs`` pick the evaluation-engine executor for
+    batched in-strategy cost queries (``serial`` | ``process`` | ``vector``;
+    ``eval_jobs > 1`` defaults the backend to ``process`` — see
+    :mod:`repro.core.engine`).  Every backend returns identical results, so
+    these are runtime knobs, deliberately *not* part of the spec (a stored
+    artifact addresses what was searched, not how it was scheduled).  They
+    apply when ``run`` builds the evaluator; a caller-provided ``ev`` keeps
+    its own executor.
 
     ``result.evaluations`` is set here, uniformly for every strategy, to the
     number of *distinct* (subgraph, hardware-point) cost-model queries the
@@ -94,7 +114,9 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
                     in (None, graph_fingerprint(graph))):
                 return cached
     g = graph if graph is not None else build_workload(spec.workload)
-    ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
+    created_ev = ev is None
+    if created_ev:
+        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs)
     entry = get_strategy(spec.strategy)
     options = spec.options
     if options is None and entry.options_cls is not None:
@@ -105,8 +127,12 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             f"strategy {spec.strategy!r} expects options of type "
             f"{entry.options_cls.__name__}, got {type(options).__name__}"
         )
-    with ev.count_run() as touched:
-        result = entry.fn(spec, options, g, ev, **runtime)
+    try:
+        with ev.count_run() as touched:
+            result = entry.fn(spec, options, g, ev, **runtime)
+    finally:
+        if created_ev:
+            ev.close()  # release executor pools; the cache dies with ev
     result.evaluations = len(touched)
     result.spec = spec
     result.meta.setdefault("graph", g.name)
@@ -142,7 +168,9 @@ def compare(spec: ExploreSpec,
             graph: Optional[Graph] = None,
             ev: Optional[CachedEvaluator] = None,
             jobs: int = 1,
-            store: Optional[ResultStore] = None) -> List[ExploreResult]:
+            store: Optional[ResultStore] = None,
+            eval_backend: Optional[str] = None,
+            eval_jobs: int = 1) -> List[ExploreResult]:
     """Run several strategies on one spec, sharing a single evaluator cache.
 
     ``strategies`` items are strategy names (run with their default options,
@@ -164,13 +192,25 @@ def compare(spec: ExploreSpec,
     ``store`` serves store hits in the parent without spawning a worker and
     persists every miss, so an interrupted comparison resumes where it
     stopped.
+
+    ``eval_backend``/``eval_jobs`` select the evaluation-engine executor for
+    *within-strategy* batches (a different axis than ``jobs``, which fans
+    out whole strategies).  They configure the shared evaluator on the
+    serial path; with ``jobs > 1`` each worker keeps the default serial
+    executor — nesting process pools inside workers oversubscribes cores.
     """
     subs = _resolve_compare_specs(spec, strategies)
     g = graph if graph is not None else build_workload(spec.workload)
-    ev = ev or CachedEvaluator(g, out_tile=spec.out_tile)
-    if jobs and jobs > 1 and len(subs) > 1:
-        return _compare_parallel(subs, g, ev, jobs, store)
-    return [run(sub, graph=g, ev=ev, store=store) for sub in subs]
+    created_ev = ev is None
+    if created_ev:
+        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs)
+    try:
+        if jobs and jobs > 1 and len(subs) > 1:
+            return _compare_parallel(subs, g, ev, jobs, store)
+        return [run(sub, graph=g, ev=ev, store=store) for sub in subs]
+    finally:
+        if created_ev:
+            ev.close()
 
 
 def _compare_worker(

@@ -3,19 +3,36 @@
 The paper's primary contribution (ASPLOS'24).  See DESIGN.md §1–2.
 """
 
-from .cocco import CoccoResult, co_explore, partition_only
 from .cost import (
     GLB_CANDIDATES,
     SHARED_CANDIDATES,
     WBUF_CANDIDATES,
     AcceleratorConfig,
     CachedEvaluator,
+    CostKernel,
     PlanCost,
     SubgraphCost,
+    SubgraphStructure,
+    compute_structure,
     evaluate_partition,
     evaluate_subgraph,
+    finish_cost,
 )
-from .ga import Genome, HWSpace, Objective, SearchResult, run_ga
+from .engine import (
+    Executor,
+    ProcessExecutor,
+    SerialExecutor,
+    VectorExecutor,
+    make_executor,
+)
+from .ga import (
+    Genome,
+    HWSpace,
+    Objective,
+    SearchResult,
+    evaluate_genomes,
+    run_ga,
+)
 from .graph import FULL, SLIDING, Edge, Graph, Node, sequential_graph
 from .memory import (
     FootprintReport,
@@ -32,6 +49,7 @@ from .partition import (
     random_partition,
     singleton_partition,
     split_to_fit,
+    split_to_fit_batch,
 )
 from .simulate import DeadlockError, SimResult, simulate_subgraph
 from .tiling import SubgraphSchedule, TensorSchedule, derive_schedule

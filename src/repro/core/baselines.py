@@ -21,7 +21,15 @@ from dataclasses import dataclass, replace
 from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from .cost import AcceleratorConfig, CachedEvaluator, PlanCost
-from .ga import Genome, HWSpace, Objective, SearchResult, mutate, run_ga
+from .ga import (
+    Genome,
+    HWSpace,
+    Objective,
+    SearchResult,
+    evaluate_genomes,
+    mutate,
+    run_ga,
+)
 from .graph import Graph
 from .partition import (
     groups_of,
@@ -180,22 +188,17 @@ def enumerate_partitions(
     states = 0
     complete = True
 
-    def subgraph_cost(sub: FrozenSet[int]) -> Optional[float]:
-        c = ev.subgraph(set(sub), acc)
-        if not c.feasible:
-            return None
-        plan = ev.plan([set(sub)], acc)
-        return objective.cost(plan, acc) - (
-            acc.buf_size_total if objective.alpha is not None else 0.0
-        )
-
     for size in range(g.n):
         for ideal in by_size.get(size, []):
             base = dp[ideal]
             frontier = [v for v in range(g.n)
                         if v not in ideal and preds[v] <= ideal]
-            # grow connected subgraphs from each frontier node (dedup by set)
+            # --- collect: grow connected subgraphs from each frontier node
+            # (dedup by set).  The walk never depends on cost results, so it
+            # runs to completion before any evaluation — which lets the whole
+            # ideal's candidate set go through the engine as one batch.
             seen_subs: Set[FrozenSet[int]] = set()
+            subs_in_order: List[FrozenSet[int]] = []
             stack: List[FrozenSet[int]] = [frozenset([v]) for v in frontier]
             while stack:
                 sub = stack.pop()
@@ -207,14 +210,7 @@ def enumerate_partitions(
                     complete = False
                     stack.clear()
                     break
-                cost = subgraph_cost(sub)
-                if cost is not None:
-                    nxt = frozenset(ideal | sub)
-                    val = base + cost
-                    if val < dp.get(nxt, math.inf):
-                        dp[nxt] = val
-                        back[nxt] = (ideal, sub)
-                        by_size.setdefault(len(nxt), []).append(nxt)
+                subs_in_order.append(sub)
                 # extensions: nodes adjacent to sub, addable (preds satisfied)
                 for u in sorted(sub):
                     for w in sorted(succs[u] | preds[u]):
@@ -224,6 +220,22 @@ def enumerate_partitions(
                             ext = frozenset(sub | {w})
                             if ext not in seen_subs:
                                 stack.append(ext)
+            # --- submit + apply: DP transitions in walk order
+            costs = ev.evaluate_batch([(set(sub), acc)
+                                       for sub in subs_in_order])
+            for sub, c in zip(subs_in_order, costs):
+                if not c.feasible:
+                    continue
+                plan = ev.plan([set(sub)], acc)
+                cost = objective.cost(plan, acc) - (
+                    acc.buf_size_total if objective.alpha is not None else 0.0
+                )
+                nxt = frozenset(ideal | sub)
+                val = base + cost
+                if val < dp.get(nxt, math.inf):
+                    dp[nxt] = val
+                    back[nxt] = (ideal, sub)
+                    by_size.setdefault(len(nxt), []).append(nxt)
             if not complete:
                 break
         if not complete:
@@ -256,15 +268,18 @@ def run_sa(
     out_tile: int = 1,
     ev: Optional[CachedEvaluator] = None,
 ) -> SearchResult:
-    """SA with Cocco's mutation operators as the neighbourhood (§4.2.4)."""
+    """SA with Cocco's mutation operators as the neighbourhood (§4.2.4).
+
+    Each step's pending genome goes through the same collect-then-submit
+    evaluation path as a GA generation (:func:`~repro.core.ga.evaluate_genomes`
+    with a batch of one), so SA shares the engine's repair/costing code
+    instead of a private evaluation loop.
+    """
     rng = random.Random(seed)
     ev = ev or CachedEvaluator(g, out_tile=out_tile)
 
     def evaluate(ind: Genome) -> None:
-        ind.groups = split_to_fit(g, ind.groups, ind.acc, out_tile=out_tile,
-                                  ev=ev)
-        ind.plan = ev.plan(ind.groups, ind.acc)
-        ind.cost = objective.cost(ind.plan, ind.acc)
+        evaluate_genomes(g, [ind], objective, ev)
 
     from .partition import random_partition
 

@@ -1,135 +1,25 @@
-"""High-level Cocco API (paper Fig. 10).
+"""High-level Cocco API — moved to the unified exploration API.
 
-.. deprecated::
-    ``co_explore`` and ``partition_only`` are thin shims over the unified
-    exploration API (:mod:`repro.api`): build an
-    :class:`~repro.api.ExploreSpec` and call :func:`repro.api.run` instead.
-    They are kept so existing imports and call sites keep working, and they
-    still return a :class:`CoccoResult`.
+The deprecated ``co_explore`` / ``partition_only`` shims (and their
+``CoccoResult``) were removed now that every caller is on :mod:`repro.api`.
+Build an :class:`~repro.api.ExploreSpec` and call :func:`repro.api.run`
+instead:
 
-``co_explore``     — Formula 2: joint (partition, memory-config) search.
-``partition_only`` — Formula 1: partition under a fixed accelerator.
+* ``partition_only(g, acc, metric=m, ...)`` (Formula 1) became::
+
+      from repro.api import ExploreSpec, GAOptions, run
+      from repro.core import HWSpace, Objective
+      run(ExploreSpec(workload=g.name, strategy="ga",
+                      objective=Objective(metric=m, alpha=None),
+                      hw=HWSpace(mode="fixed", base=acc)), graph=g)
+
+* ``co_explore(g, mode=mode, metric=m, alpha=a, ...)`` (Formula 2) became::
+
+      run(ExploreSpec(workload=g.name, strategy="ga",
+                      objective=Objective(metric=m, alpha=a),
+                      hw=HWSpace(mode=mode)), graph=g)
+
+:func:`repro.api.run` returns an :class:`~repro.api.ExploreResult` — a
+superset of the old ``CoccoResult`` (same groups/acc/plan/cost/history
+fields, plus spec, meta, and JSON round-tripping).
 """
-
-from __future__ import annotations
-
-import warnings
-from dataclasses import dataclass, field
-from typing import List, Optional, Set, Tuple
-
-from .cost import AcceleratorConfig, CachedEvaluator, PlanCost
-from .ga import HWSpace, Objective
-from .graph import Graph
-
-
-@dataclass
-class CoccoResult:
-    graph: str
-    groups: List[Set[int]]
-    acc: AcceleratorConfig
-    plan: PlanCost
-    cost: float
-    objective: Objective
-    history: List[Tuple[int, float]]
-    samples: int
-    population_log: List = field(default_factory=list)
-
-    @property
-    def n_subgraphs(self) -> int:
-        return len(self.groups)
-
-    def summary(self) -> str:
-        bw = self.plan.avg_bandwidth() / 1e9
-        return (
-            f"{self.graph}: {self.n_subgraphs} subgraphs | "
-            f"cost={self.cost:.4g} | EMA={self.plan.ema_total/1e6:.2f} MB | "
-            f"energy={self.plan.energy_pj/1e9:.3f} mJ | "
-            f"avg BW={bw:.2f} GB/s | "
-            f"GLB={self.acc.glb_bytes//1024}KB"
-            + ("" if self.acc.shared else
-               f" WBUF={self.acc.wbuf_bytes//1024}KB")
-        )
-
-
-def _run_ga_spec(
-    g: Graph,
-    obj: Objective,
-    hw: HWSpace,
-    sample_budget: int,
-    population: int,
-    seed: int,
-    out_tile: int,
-    log_populations: bool,
-    ev: Optional[CachedEvaluator],
-    ga_kw: dict,
-) -> CoccoResult:
-    """Shared shim body: ExploreSpec -> run -> CoccoResult."""
-    from repro.api import ExploreSpec, GAOptions
-    from repro.api import run as api_run
-
-    init_groups = ga_kw.pop("init_groups", None)
-    opts = GAOptions(population=population, log_populations=log_populations,
-                     **ga_kw)
-    spec = ExploreSpec(workload=g.name, strategy="ga", objective=obj, hw=hw,
-                       sample_budget=sample_budget, seed=seed,
-                       out_tile=out_tile, options=opts)
-    res = api_run(spec, graph=g, ev=ev, init_groups=init_groups)
-    return CoccoResult(
-        graph=g.name,
-        groups=res.groups,
-        acc=res.acc,
-        plan=res.plan,
-        cost=res.cost,
-        objective=obj,
-        history=res.history,
-        samples=res.samples,
-        population_log=res.population_log,
-    )
-
-
-def partition_only(
-    g: Graph,
-    acc: Optional[AcceleratorConfig] = None,
-    metric: str = "ema",
-    sample_budget: int = 50_000,
-    population: int = 100,
-    seed: int = 0,
-    out_tile: int = 1,
-    ev: Optional[CachedEvaluator] = None,
-    **ga_kw,
-) -> CoccoResult:
-    warnings.warn(
-        "partition_only is deprecated; use repro.api.run(ExploreSpec(...)) "
-        "with hw=HWSpace(mode='fixed', base=acc)",
-        DeprecationWarning, stacklevel=2)
-    acc = acc or AcceleratorConfig()
-    obj = Objective(metric=metric, alpha=None)
-    hw = HWSpace(mode="fixed", base=acc)
-    log_populations = ga_kw.pop("log_populations", False)
-    return _run_ga_spec(g, obj, hw, sample_budget, population, seed,
-                        out_tile, log_populations, ev, ga_kw)
-
-
-def co_explore(
-    g: Graph,
-    mode: str = "separate",              # "separate" | "shared"
-    metric: str = "energy",
-    alpha: float = 0.002,
-    base: Optional[AcceleratorConfig] = None,
-    sample_budget: int = 50_000,
-    population: int = 100,
-    seed: int = 0,
-    out_tile: int = 1,
-    log_populations: bool = False,
-    ev: Optional[CachedEvaluator] = None,
-    **ga_kw,
-) -> CoccoResult:
-    warnings.warn(
-        "co_explore is deprecated; use repro.api.run(ExploreSpec(...)) "
-        "with hw=HWSpace(mode=mode, base=base)",
-        DeprecationWarning, stacklevel=2)
-    base = base or AcceleratorConfig()
-    obj = Objective(metric=metric, alpha=alpha)
-    hw = HWSpace(mode=mode, base=base)
-    return _run_ga_spec(g, obj, hw, sample_budget, population, seed,
-                        out_tile, log_populations, ev, ga_kw)

@@ -167,6 +167,131 @@ class PlanCost:
         raise ValueError(name)
 
 
+# ---------------------------------------------------------------------------
+# the pure cost kernel
+# ---------------------------------------------------------------------------
+#
+# A (frozenset(nodes), hardware-point) query is a side-effect-free function of
+# the graph, split into two pure halves so batched executors can exploit the
+# split (see core/engine.py):
+#
+#   compute_structure(g, nodes, out_tile)  — the expensive, hardware-
+#       independent half: EMA sums, schedule derivation, footprint, on-chip
+#       access traffic.  Depends only on the node set (and out_tile).
+#   finish_cost(structure, acc)            — the cheap, hardware-dependent
+#       half: feasibility vs the buffer capacities, single-layer weight
+#       streaming, multi-core weight sharing.  Pure elementwise arithmetic,
+#       so a whole batch vectorizes (engine.VectorExecutor).
+#
+# evaluate_subgraph == finish_cost(compute_structure(...), acc) exactly.
+
+
+@dataclass(frozen=True)
+class SubgraphStructure:
+    """Hardware-independent half of a subgraph's cost (pure in the node set).
+
+    ``sched_error`` carries the ``derive_schedule`` failure message when the
+    subgraph has no consumption-centric schedule (then every hardware point
+    is infeasible and the remaining fields stay at their defaults).
+    """
+
+    nodes: Tuple[int, ...]
+    macs: int = 0
+    weight_total: int = 0
+    ema_in: int = 0
+    ema_out: int = 0
+    footprint: int = 0
+    glb_access_bytes: int = 0
+    sched_error: Optional[str] = None
+
+
+def compute_structure(g: Graph, nodes: Set[int],
+                      out_tile: int = 1) -> SubgraphStructure:
+    """Hardware-independent analysis of one subgraph (pure function)."""
+    nodes = set(nodes)
+    ntuple = tuple(sorted(nodes))
+    macs = sum(g.nodes[v].macs for v in nodes)
+    weight_total = sum(g.nodes[v].weight_bytes for v in nodes)
+
+    # ---- EMA ------------------------------------------------------------
+    ext_in = {e.src for e in g.boundary_in(nodes)}
+    ema_in = sum(g.nodes[t].out_bytes for t in ext_in)
+    out_tensors = {e.src for e in g.boundary_out(nodes)}
+    out_tensors |= {v for v in nodes if g.nodes[v].is_output}
+    ema_out = sum(g.nodes[t].out_bytes for t in out_tensors)
+
+    # ---- schedule + footprint -------------------------------------------
+    try:
+        sched = derive_schedule(g, nodes, out_tile=out_tile)
+    except ValueError as err:
+        return SubgraphStructure(nodes=ntuple, macs=macs,
+                                 weight_total=weight_total,
+                                 ema_in=ema_in, ema_out=ema_out,
+                                 sched_error=str(err))
+    fp = subgraph_footprint(g, nodes, schedule=sched)
+
+    # ---- on-chip access traffic ------------------------------------------
+    # each produced byte written once; each byte read ~F/s times per consumer
+    glb = 0
+    for t, ts in sched.tensors.items():
+        b = g.nodes[t].out_bytes
+        glb += b  # write (from DRAM or from PE)
+        for e in g.out_edges(t):
+            if e.dst in nodes:
+                amp = (e.F / e.s) if e.kind != FULL else 1.0
+                glb += int(b * amp)
+    return SubgraphStructure(nodes=ntuple, macs=macs,
+                             weight_total=weight_total,
+                             ema_in=ema_in, ema_out=ema_out,
+                             footprint=fp.total_bytes, glb_access_bytes=glb)
+
+
+def finish_cost(st: SubgraphStructure, acc: AcceleratorConfig) -> SubgraphCost:
+    """Hardware-dependent half: capacities, streaming, weight sharing.
+
+    Pure arithmetic in ``st``'s fields and ``acc``'s capacities — the
+    branch structure here is what ``engine.VectorExecutor`` vectorizes.
+    """
+    sc = SubgraphCost(nodes=st.nodes, macs=st.macs,
+                      weight_resident=st.weight_total,
+                      ema_in=st.ema_in, ema_out=st.ema_out,
+                      ema_w=st.weight_total)
+    if st.sched_error is not None:
+        sc.feasible = False
+        sc.reason = f"schedule: {st.sched_error}"
+        return sc
+    sc.footprint = st.footprint
+
+    glb_cap = acc.glb_bytes
+    wbuf_cap = acc.glb_bytes if acc.shared else acc.wbuf_bytes
+    # multi-core weight sharing (§5.4.2): each core buffers 1/n of the weights
+    sc.weight_resident = sc.weight_resident // max(acc.weight_share_cores, 1)
+    single = len(st.nodes) == 1
+    if acc.shared:
+        if sc.footprint + sc.weight_resident > glb_cap:
+            if not single:
+                sc.feasible = False
+                sc.reason = "shared buffer overflow"
+            else:
+                _stream_single_layer(sc, glb_cap)
+    else:
+        if sc.footprint > glb_cap:
+            if not single:
+                sc.feasible = False
+                sc.reason = "global buffer overflow"
+            else:
+                _stream_single_layer(sc, glb_cap)
+        if sc.feasible and not single and sc.weight_resident > wbuf_cap:
+            sc.feasible = False
+            sc.reason = "weight buffer overflow"
+        if sc.feasible and single and sc.weight_resident > wbuf_cap:
+            pass  # single layer streams weights (already loaded once)
+
+    sc.glb_access_bytes = st.glb_access_bytes
+    sc.wbuf_access_bytes = sc.weight_resident  # one streaming pass per sweep
+    return sc
+
+
 def evaluate_subgraph(
     g: Graph,
     nodes: Set[int],
@@ -176,77 +301,42 @@ def evaluate_subgraph(
 ) -> SubgraphCost:
     """Cost one subgraph. ``consumers_outside[t]`` = number of later subgraphs
     reading tensor t (re-reads cost EMA each time; charged at the reader)."""
-    nodes = set(nodes)
-    sc = SubgraphCost(nodes=tuple(sorted(nodes)))
-    sc.macs = sum(g.nodes[v].macs for v in nodes)
-    sc.weight_resident = sum(g.nodes[v].weight_bytes for v in nodes)
-
-    # ---- EMA ------------------------------------------------------------
-    ext_in = {e.src for e in g.boundary_in(nodes)}
-    sc.ema_in = sum(g.nodes[t].out_bytes for t in ext_in)
-    out_tensors = {e.src for e in g.boundary_out(nodes)}
-    out_tensors |= {v for v in nodes if g.nodes[v].is_output}
-    sc.ema_out = sum(g.nodes[t].out_bytes for t in out_tensors)
-    sc.ema_w = sc.weight_resident
-
-    # ---- feasibility ------------------------------------------------------
-    try:
-        sched = derive_schedule(g, nodes, out_tile=out_tile)
-    except ValueError as err:
-        sc.feasible = False
-        sc.reason = f"schedule: {err}"
-        return sc
-    fp = subgraph_footprint(g, nodes, schedule=sched)
-    sc.footprint = fp.total_bytes
-
-    glb_cap = acc.glb_bytes
-    wbuf_cap = acc.glb_bytes if acc.shared else acc.wbuf_bytes
-    # multi-core weight sharing (§5.4.2): each core buffers 1/n of the weights
-    sc.weight_resident = sc.weight_resident // max(acc.weight_share_cores, 1)
-    if acc.shared:
-        if sc.footprint + sc.weight_resident > glb_cap:
-            if len(nodes) > 1:
-                sc.feasible = False
-                sc.reason = "shared buffer overflow"
-            else:
-                _stream_single_layer(g, nodes, sc, glb_cap)
-    else:
-        if sc.footprint > glb_cap:
-            if len(nodes) > 1:
-                sc.feasible = False
-                sc.reason = "global buffer overflow"
-            else:
-                _stream_single_layer(g, nodes, sc, glb_cap)
-        if sc.feasible and len(nodes) > 1 and sc.weight_resident > wbuf_cap:
-            sc.feasible = False
-            sc.reason = "weight buffer overflow"
-        if sc.feasible and len(nodes) == 1 and sc.weight_resident > wbuf_cap:
-            pass  # single layer streams weights (already loaded once)
-
-    # ---- on-chip access traffic ------------------------------------------
-    # each produced byte written once; each byte read ~F/s times per consumer
-    glb = 0
-    for t, ts in sched.tensors.items():
-        b = g.nodes[t].out_bytes
-        glb += b  # write (from DRAM or from PE)
-        for e in g.edges:
-            if e.src == t and e.dst in nodes:
-                amp = (e.F / e.s) if e.kind != FULL else 1.0
-                glb += int(b * amp)
-    sc.glb_access_bytes = glb
-    sc.wbuf_access_bytes = sc.weight_resident  # one streaming pass per sweep
-    return sc
+    return finish_cost(compute_structure(g, nodes, out_tile=out_tile), acc)
 
 
-def _stream_single_layer(g: Graph, nodes: Set[int], sc: SubgraphCost,
-                         glb_cap: int) -> None:
+def _stream_single_layer(sc: SubgraphCost, glb_cap: int) -> None:
     """Single layer whose line-buffer footprint exceeds the buffer: sweep the
     output in row blocks; weights are re-streamed once per block."""
-    (v,) = tuple(nodes)
     n_blocks = max(1, math.ceil(sc.footprint / max(glb_cap, 1)))
     sc.ema_w = sc.weight_resident * n_blocks
     sc.footprint = min(sc.footprint, glb_cap)
     sc.reason = f"streamed in {n_blocks} blocks"
+
+
+class CostKernel:
+    """The pure evaluation kernel: graph + out_tile + a structure memo.
+
+    ``cost(nodes, acc)`` is a deterministic, side-effect-free function of
+    its arguments; the only state here is memoization of
+    :func:`compute_structure` (itself pure), shared by every executor
+    backend.  Worker processes hold their own ``CostKernel`` and stay warm
+    across batches.
+    """
+
+    def __init__(self, g: Graph, out_tile: int = 1) -> None:
+        self.g = g
+        self.out_tile = out_tile
+        self._structures: Dict[frozenset, SubgraphStructure] = {}
+
+    def structure(self, nodes: frozenset) -> SubgraphStructure:
+        st = self._structures.get(nodes)
+        if st is None:
+            st = compute_structure(self.g, set(nodes), out_tile=self.out_tile)
+            self._structures[nodes] = st
+        return st
+
+    def cost(self, nodes: frozenset, acc: AcceleratorConfig) -> SubgraphCost:
+        return finish_cost(self.structure(nodes), acc)
 
 
 def evaluate_partition(
@@ -271,16 +361,38 @@ class CachedEvaluator:
     streaming half also depends on the accelerator config, so the cache key is
     (frozenset(nodes), glb, wbuf, shared).  GA populations re-evaluate mostly
     unchanged subgraphs, giving ~2 orders of magnitude speedup.
+
+    The evaluator is cache + counters only; *how* misses are computed is the
+    ``executor``'s job (:mod:`repro.core.engine`): ``serial`` evaluates them
+    inline through the pure :class:`CostKernel`, ``process`` shards a batch
+    over worker processes, ``vector`` batches the hardware-dependent
+    arithmetic through NumPy.  Every backend returns identical costs (the
+    kernel is deterministic), so search results do not depend on the backend.
     """
 
-    def __init__(self, g: Graph, out_tile: int = 1) -> None:
+    def __init__(self, g: Graph, out_tile: int = 1,
+                 executor: Optional["Executor"] = None) -> None:
         self.g = g
         self.out_tile = out_tile
+        self.kernel = CostKernel(g, out_tile=out_tile)
+        self._executor = executor
         self._cache: Dict[Tuple, SubgraphCost] = {}
         self.evaluations = 0   # cache misses (true cost-model invocations)
         self.lookups = 0
         self.merged = 0        # entries adopted from other evaluators
         self._run_scopes: List[Set[Tuple]] = []
+
+    @property
+    def executor(self) -> "Executor":
+        if self._executor is None:
+            from .engine import SerialExecutor  # deferred: engine imports us
+            self._executor = SerialExecutor()
+        return self._executor
+
+    def close(self) -> None:
+        """Release executor resources (worker pools); the cache survives."""
+        if self._executor is not None:
+            self._executor.close()
 
     def _key(self, nodes: frozenset, acc: AcceleratorConfig) -> Tuple:
         return (nodes, acc.glb_bytes, acc.wbuf_bytes, acc.shared,
@@ -294,10 +406,54 @@ class CachedEvaluator:
             scope.add(key)
         hit = self._cache.get(key)
         if hit is None:
-            hit = evaluate_subgraph(self.g, set(fs), acc, out_tile=self.out_tile)
+            hit = self.kernel.cost(fs, acc)
             self._cache[key] = hit
             self.evaluations += 1
         return hit
+
+    def evaluate_batch(
+        self, queries: Sequence[Tuple[Set[int], AcceleratorConfig]],
+    ) -> List[SubgraphCost]:
+        """Evaluate a batch of (nodes, acc) queries through the executor.
+
+        Cache hits are served directly; distinct misses are submitted to the
+        executor as one batch (where ``process``/``vector`` backends get
+        their parallelism) and adopted into the cache on return.  Results
+        come back in query order and are identical to issuing
+        :meth:`subgraph` serially — batching changes the execution schedule,
+        never the values or the distinct-query accounting.
+        """
+        results: List[Optional[SubgraphCost]] = [None] * len(queries)
+        miss_keys: List[Tuple] = []
+        miss_queries: List[Tuple[frozenset, AcceleratorConfig]] = []
+        miss_pos: Dict[Tuple, List[int]] = {}
+        for i, (nodes, acc) in enumerate(queries):
+            fs = frozenset(nodes)
+            key = self._key(fs, acc)
+            self.lookups += 1
+            for scope in self._run_scopes:
+                scope.add(key)
+            hit = self._cache.get(key)
+            if hit is not None:
+                results[i] = hit
+            elif key in miss_pos:
+                miss_pos[key].append(i)
+            else:
+                miss_pos[key] = [i]
+                miss_keys.append(key)
+                miss_queries.append((fs, acc))
+        if miss_queries:
+            costs = self.executor.evaluate(self.kernel, miss_queries)
+            # every miss counts as one true cost-model invocation, whichever
+            # executor computed it — so run_ga/run_sa report the same
+            # ``evaluations`` under every backend; ``merged`` stays reserved
+            # for cross-evaluator adoption (parallel compare join)
+            for key, cost in zip(miss_keys, costs):
+                self._cache[key] = cost
+                self.evaluations += 1
+                for i in miss_pos[key]:
+                    results[i] = cost
+        return results  # type: ignore[return-value]
 
     @contextmanager
     def count_run(self) -> Iterator[Set[Tuple]]:
@@ -342,3 +498,18 @@ class CachedEvaluator:
         return PlanCost(
             subgraphs=[self.subgraph(s, acc) for s in groups], acc=acc
         )
+
+    def plan_batch(
+        self,
+        items: Sequence[Tuple[Sequence[Set[int]], AcceleratorConfig]],
+    ) -> List[PlanCost]:
+        """Cost many plans in one executor batch (order preserved)."""
+        queries = [(s, acc) for groups, acc in items for s in groups]
+        costs = self.evaluate_batch(queries)
+        plans: List[PlanCost] = []
+        pos = 0
+        for groups, acc in items:
+            n = len(groups)
+            plans.append(PlanCost(subgraphs=costs[pos:pos + n], acc=acc))
+            pos += n
+        return plans

@@ -1,0 +1,267 @@
+"""Batched evaluation engine: pluggable executors over the pure cost kernel.
+
+:class:`~repro.core.cost.CachedEvaluator` is cache + counters; *how* a batch
+of cache misses is computed is an :class:`Executor`'s job.  All backends run
+the same pure kernel (:class:`~repro.core.cost.CostKernel`), so they return
+identical costs and search results never depend on the backend:
+
+* ``serial``  — evaluate misses inline, one by one (the default; this is
+  exactly the pre-engine behaviour).
+* ``process`` — shard a batch over a persistent ``ProcessPoolExecutor``.
+  Each worker holds its own warm ``CostKernel`` (structure memo survives
+  across batches); results are adopted into the parent evaluator's cache
+  on join, like parallel ``compare``'s merge-on-join.  Wins when the
+  structure half (schedule derivation) dominates — large graphs, cold
+  caches, big GA generations.
+* ``vector``  — compute each distinct node-set's structure once through the
+  kernel memo, then batch the hardware-dependent half
+  (:func:`~repro.core.cost.finish_cost`) through NumPy in one vectorized
+  pass.  Wins when one subgraph is probed at many hardware points
+  (co-exploration populations).  Bit-identical to the scalar kernel; inputs
+  that could round differently in float64 (``> 2**53``) or overflow int64
+  products fall back to the scalar path element-wise.
+
+Pick a backend by name via :func:`make_executor` — the seam the API layer's
+``eval_backend``/``eval_jobs`` options thread through.
+"""
+
+from __future__ import annotations
+
+import math
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import fields as dataclass_fields
+from typing import List, Optional, Sequence, Tuple
+
+from .cost import AcceleratorConfig, CostKernel, SubgraphCost, finish_cost
+from .graph import Graph
+
+EvalQuery = Tuple[frozenset, AcceleratorConfig]
+
+# element-wise scalar-fallback guards for the vector backend: float64 stays
+# exact below 2**53; int64 products of two values below 2**31 cannot overflow
+_FLOAT_EXACT = 1 << 53
+_PROD_SAFE = 1 << 31
+
+
+class Executor:
+    """How a batch of distinct cost-kernel queries gets computed."""
+
+    name = "abstract"
+
+    def evaluate(self, kernel: CostKernel,
+                 queries: Sequence[EvalQuery]) -> List[SubgraphCost]:
+        raise NotImplementedError
+
+    def close(self) -> None:  # release pools etc.; idempotent
+        pass
+
+
+class SerialExecutor(Executor):
+    """Default backend: inline, one query at a time (pre-engine behaviour)."""
+
+    name = "serial"
+
+    def evaluate(self, kernel: CostKernel,
+                 queries: Sequence[EvalQuery]) -> List[SubgraphCost]:
+        return [kernel.cost(nodes, acc) for nodes, acc in queries]
+
+
+# -- process backend ---------------------------------------------------------
+
+_WORKER_KERNEL: Optional[CostKernel] = None
+
+# wire order derived from the dataclass itself, so both protocol ends stay
+# in sync across field reorders (and renames fail loudly at construction)
+_COST_FIELDS = tuple(f.name for f in dataclass_fields(SubgraphCost))
+
+
+def _init_worker(g: Graph, out_tile: int) -> None:
+    global _WORKER_KERNEL
+    _WORKER_KERNEL = CostKernel(g, out_tile=out_tile)
+
+
+def _worker_eval(accs: List[AcceleratorConfig],
+                 shard: List[Tuple[Tuple[int, ...], int]]) -> List[tuple]:
+    """Evaluate ``(nodes, acc-index)`` pairs; return plain field tuples.
+
+    The compact protocol (an acc table instead of an acc per query, field
+    tuples instead of dataclass instances) roughly halves the pickle cost,
+    which is what bounds the process backend on cheap kernels.
+    """
+    assert _WORKER_KERNEL is not None, "worker pool not initialized"
+    cost = _WORKER_KERNEL.cost
+    out = []
+    for nodes, ai in shard:
+        c = cost(frozenset(nodes), accs[ai])
+        out.append(tuple(getattr(c, name) for name in _COST_FIELDS))
+    return out
+
+
+class ProcessExecutor(Executor):
+    """Shard batches over a persistent worker-process pool.
+
+    The pool is created lazily on the first batch (bound to that kernel's
+    graph/out_tile) and reused for every later batch, so workers keep their
+    structure memos warm across GA generations.  ``close()`` (or evaluator
+    ``close()``) shuts the pool down.
+    """
+
+    name = "process"
+
+    def __init__(self, jobs: int = 2) -> None:
+        self.jobs = max(1, int(jobs))
+        self._pool: Optional[ProcessPoolExecutor] = None
+        # the kernel the pool's workers were initialized for; held by
+        # reference so a recycled id can never alias a different kernel
+        self._pool_kernel: Optional[CostKernel] = None
+
+    def _pool_for(self, kernel: CostKernel) -> ProcessPoolExecutor:
+        if self._pool is not None and self._pool_kernel is not kernel:
+            self.close()
+        if self._pool is None:
+            # Default start method (fork on Linux), matching the parallel
+            # compare() pool: spawn/forkserver would re-import __main__ and
+            # break REPL/stdin callers, and the workers themselves only run
+            # the pure kernel (no JAX/threads).  The residual fork-while-
+            # threaded risk is the same one compare(jobs=N) already accepts.
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.jobs,
+                initializer=_init_worker,
+                initargs=(kernel.g, kernel.out_tile))
+            self._pool_kernel = kernel
+        return self._pool
+
+    def evaluate(self, kernel: CostKernel,
+                 queries: Sequence[EvalQuery]) -> List[SubgraphCost]:
+        queries = list(queries)
+        if len(queries) <= 2 * self.jobs:  # not worth the round-trips
+            return [kernel.cost(nodes, acc) for nodes, acc in queries]
+        pool = self._pool_for(kernel)
+        # acc table: batches typically probe few distinct hardware points
+        accs: List[AcceleratorConfig] = []
+        acc_idx: dict = {}
+        compact: List[Tuple[Tuple[int, ...], int]] = []
+        for nodes, acc in queries:
+            ai = acc_idx.get(id(acc))
+            if ai is None:
+                ai = acc_idx[id(acc)] = len(accs)
+                accs.append(acc)
+            compact.append((tuple(nodes), ai))
+        n_shards = min(self.jobs, len(queries))
+        futures = [pool.submit(_worker_eval, accs, compact[i::n_shards])
+                   for i in range(n_shards)]
+        outs = [f.result() for f in futures]
+        results: List[Optional[SubgraphCost]] = [None] * len(queries)
+        for s, shard_out in enumerate(outs):
+            for j, vals in enumerate(shard_out):
+                results[s + j * n_shards] = SubgraphCost(
+                    **dict(zip(_COST_FIELDS, vals)))
+        return results  # type: ignore[return-value]
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+            self._pool_kernel = None
+
+
+# -- vector backend ----------------------------------------------------------
+
+class VectorExecutor(Executor):
+    """NumPy-vectorized ``finish_cost`` over a whole batch.
+
+    Structures come from the kernel memo (one ``derive_schedule`` per
+    distinct node set, like every backend); the capacity/streaming/weight-
+    sharing arithmetic then runs as one vectorized pass over the batch.
+    """
+
+    name = "vector"
+
+    def evaluate(self, kernel: CostKernel,
+                 queries: Sequence[EvalQuery]) -> List[SubgraphCost]:
+        import numpy as np
+
+        queries = list(queries)
+        results: List[Optional[SubgraphCost]] = [None] * len(queries)
+        structs = [kernel.structure(nodes) for nodes, _ in queries]
+        vec_idx = []
+        for i, ((_, acc), st) in enumerate(zip(queries, structs)):
+            if (st.sched_error is not None
+                    or max(st.footprint, st.weight_total) >= _PROD_SAFE
+                    or max(acc.glb_bytes, acc.wbuf_bytes) >= _FLOAT_EXACT):
+                results[i] = finish_cost(st, acc)  # scalar fallback
+            else:
+                vec_idx.append(i)
+        if not vec_idx:
+            return results  # type: ignore[return-value]
+
+        sts = [structs[i] for i in vec_idx]
+        accs = [queries[i][1] for i in vec_idx]
+        fp = np.array([s.footprint for s in sts], dtype=np.int64)
+        w_total = np.array([s.weight_total for s in sts], dtype=np.int64)
+        single = np.array([len(s.nodes) == 1 for s in sts], dtype=bool)
+        glb = np.array([a.glb_bytes for a in accs], dtype=np.int64)
+        wbuf = np.array([a.wbuf_bytes for a in accs], dtype=np.int64)
+        shared = np.array([a.shared for a in accs], dtype=bool)
+        share = np.maximum(
+            np.array([a.weight_share_cores for a in accs], dtype=np.int64), 1)
+
+        wr = w_total // share
+        glb_cap = glb
+        wbuf_cap = np.where(shared, glb, wbuf)
+        overflow = np.where(shared, fp + wr > glb_cap, fp > glb_cap)
+        infeasible_buf = overflow & ~single
+        stream = overflow & single
+        # mirrors _stream_single_layer: math.ceil of a float64 true division
+        n_blocks = np.maximum(
+            np.ceil(fp / np.maximum(glb_cap, 1)).astype(np.int64), 1)
+        ema_w = np.where(stream, wr * n_blocks, w_total)
+        fp_out = np.where(stream, np.minimum(fp, glb_cap), fp)
+        w_overflow = ~shared & ~single & ~infeasible_buf & (wr > wbuf_cap)
+        feasible = ~(infeasible_buf | w_overflow)
+
+        for j, i in enumerate(vec_idx):
+            st, acc = sts[j], accs[j]
+            if infeasible_buf[j]:
+                reason = ("shared buffer overflow" if shared[j]
+                          else "global buffer overflow")
+            elif w_overflow[j]:
+                reason = "weight buffer overflow"
+            elif stream[j]:
+                reason = f"streamed in {int(n_blocks[j])} blocks"
+            else:
+                reason = ""
+            results[i] = SubgraphCost(
+                nodes=st.nodes,
+                ema_in=st.ema_in,
+                ema_out=st.ema_out,
+                ema_w=int(ema_w[j]),
+                macs=st.macs,
+                footprint=int(fp_out[j]),
+                weight_resident=int(wr[j]),
+                glb_access_bytes=st.glb_access_bytes,
+                wbuf_access_bytes=int(wr[j]),
+                feasible=bool(feasible[j]),
+                reason=reason,
+            )
+        return results  # type: ignore[return-value]
+
+
+BACKENDS = ("serial", "process", "vector")
+
+
+def make_executor(backend: Optional[str] = None, jobs: int = 1) -> Executor:
+    """Resolve an ``eval_backend``/``eval_jobs`` pair to an executor.
+
+    ``backend=None`` picks ``process`` when ``jobs > 1``, else ``serial``.
+    """
+    if backend is None:
+        backend = "process" if jobs and jobs > 1 else "serial"
+    if backend == "serial":
+        return SerialExecutor()
+    if backend == "process":
+        return ProcessExecutor(jobs=jobs)
+    if backend == "vector":
+        return VectorExecutor()
+    raise ValueError(
+        f"unknown eval backend {backend!r}; known: {', '.join(BACKENDS)}")

@@ -37,7 +37,7 @@ from .partition import (
     random_partition,
     singleton_partition,
     split_group_topo,
-    split_to_fit,
+    split_to_fit_batch,
 )
 
 
@@ -243,13 +243,28 @@ class SearchResult:
     evaluations: int
 
 
-def _evaluate(g: Graph, genome: Genome, obj: Objective, ev: CachedEvaluator,
-              out_tile: int) -> None:
-    genome.groups = split_to_fit(g, genome.groups, genome.acc,
-                                 out_tile=out_tile, ev=ev)
-    plan = ev.plan(genome.groups, genome.acc)
-    genome.plan = plan
-    genome.cost = obj.cost(plan, genome.acc)
+def evaluate_genomes(g: Graph, genomes: Sequence[Genome], obj: Objective,
+                     ev: CachedEvaluator) -> None:
+    """Batched genome evaluation: collect → submit → apply.
+
+    Phase 1 runs the in-situ split repair (§4.4.4) for the whole batch, one
+    evaluator batch per repair round; phase 2 costs every repaired plan in a
+    single batch.  Repaired groups, plan, and cost are written back to each
+    genome Lamarckian-style — exactly what the old per-genome ``_evaluate``
+    did, but with "what to evaluate" separated from "how it's executed" so
+    the engine's executor can parallelize within a generation.
+    """
+    if not genomes:
+        return
+    repaired = split_to_fit_batch(
+        g, [(genome.groups, genome.acc) for genome in genomes], ev)
+    for genome, groups in zip(genomes, repaired):
+        genome.groups = groups
+    plans = ev.plan_batch([(genome.groups, genome.acc)
+                           for genome in genomes])
+    for genome, plan in zip(genomes, plans):
+        genome.plan = plan
+        genome.cost = obj.cost(plan, genome.acc)
 
 
 def run_ga(
@@ -288,8 +303,8 @@ def run_ga(
     pop_log: List[List[Tuple[int, float, float]]] = []
     best: Optional[Genome] = None
 
+    evaluate_genomes(g, pop, objective, ev)
     for ind in pop:
-        _evaluate(g, ind, objective, ev, out_tile)
         samples += 1
         if best is None or ind.cost < best.cost:
             best = ind.clone()
@@ -310,17 +325,18 @@ def run_ga(
                 child = mutate(g, rng.choice(pop), hw, rng)
             offspring.append(child)
 
-        evaluated: List[Genome] = []
-        for ind in offspring:
-            _evaluate(g, ind, objective, ev, out_tile)
-            evaluated.append(ind)
+        # --- evaluation: one engine batch per generation ----------------
+        # the budget cap is known up front (evaluation spends one sample per
+        # child), so truncating *before* the batch reproduces the serial
+        # early-break exactly
+        evaluated = offspring[: sample_budget - samples]
+        evaluate_genomes(g, evaluated, objective, ev)
+        for ind in evaluated:
             samples += 1
             if ind.cost < best.cost:
                 best = ind.clone()
                 best.cost, best.plan = ind.cost, ind.plan
             history.append((samples, best.cost))
-            if samples >= sample_budget:
-                break
 
         # --- tournament selection over parents + offspring --------------
         pool = pop + evaluated

@@ -72,6 +72,9 @@ class Graph:
         self.edges: List[Edge] = []
         self._out: Dict[int, List[Edge]] = {}
         self._in: Dict[int, List[Edge]] = {}
+        # undirected neighbour ids, for O(deg) connectivity queries (the GA's
+        # normalize/repair loop calls them hundreds of thousands of times)
+        self._und: Dict[int, List[int]] = {}
 
     # -- construction -----------------------------------------------------
     def add_node(
@@ -90,6 +93,7 @@ class Graph:
         )
         self._out[idx] = []
         self._in[idx] = []
+        self._und[idx] = []
         return idx
 
     def add_edge(self, src: int, dst: int, F: int = 1, s: int = 1,
@@ -105,6 +109,8 @@ class Graph:
         self.edges.append(e)
         self._out[src].append(e)
         self._in[dst].append(e)
+        self._und[src].append(dst)
+        self._und[dst].append(src)
 
     # -- queries ----------------------------------------------------------
     def __len__(self) -> int:
@@ -154,10 +160,7 @@ class Graph:
             return False
         if len(nodes) == 1:
             return True
-        adj: Dict[int, List[int]] = {v: [] for v in nodes}
-        for e in self.internal_edges(nodes):
-            adj[e.src].append(e.dst)
-            adj[e.dst].append(e.src)
+        und = self._und
         seen = set()
         stack = [next(iter(nodes))]
         while stack:
@@ -165,16 +168,15 @@ class Graph:
             if v in seen:
                 continue
             seen.add(v)
-            stack.extend(w for w in adj[v] if w not in seen)
+            stack.extend(w for w in und[v] if w in nodes and w not in seen)
         return len(seen) == len(nodes)
 
     def weakly_connected_components(self, nodes: Set[int]) -> List[Set[int]]:
+        if len(nodes) == 1:  # fast path: most GA groups are singletons
+            return [set(nodes)]
         remaining = set(nodes)
         comps: List[Set[int]] = []
-        adj: Dict[int, List[int]] = {v: [] for v in nodes}
-        for e in self.internal_edges(nodes):
-            adj[e.src].append(e.dst)
-            adj[e.dst].append(e.src)
+        und = self._und
         while remaining:
             root = next(iter(remaining))
             comp = set()
@@ -184,7 +186,11 @@ class Graph:
                 if v in comp:
                     continue
                 comp.add(v)
-                stack.extend(w for w in adj[v] if w not in comp)
+                # neighbours of an earlier component are never reachable, so
+                # filtering against `remaining` equals filtering against the
+                # full node set
+                stack.extend(w for w in und[v]
+                             if w in remaining and w not in comp)
             comps.append(comp)
             remaining -= comp
         return comps

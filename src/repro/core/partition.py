@@ -49,10 +49,13 @@ def is_valid(g: Graph, P: Sequence[int]) -> bool:
     return True
 
 
-def _quotient_edges(g: Graph, gid: Dict[int, int]) -> Set[Tuple[int, int]]:
+def _quotient_edges(g: Graph, gid: Sequence[int]) -> Set[Tuple[int, int]]:
     q = set()
     for e in g.edges:
         a, b = gid[e.src], gid[e.dst]
+        if a < 0 or b < 0:
+            raise ValueError(
+                f"groups do not cover node {e.src if a < 0 else e.dst}")
         if a != b:
             q.add((a, b))
     return q
@@ -60,23 +63,25 @@ def _quotient_edges(g: Graph, gid: Dict[int, int]) -> Set[Tuple[int, int]]:
 
 def _topo_order_quotient(n_groups: int,
                          qedges: Set[Tuple[int, int]]) -> Optional[List[int]]:
-    """Kahn; None if cyclic."""
+    """Kahn, smallest id first (a min-heap pops the same order the previous
+    sort-per-iteration implementation did); None if cyclic."""
+    import heapq
+
     indeg = [0] * n_groups
     out: Dict[int, List[int]] = {i: [] for i in range(n_groups)}
     for a, b in qedges:
         out[a].append(b)
         indeg[b] += 1
-    stack = [i for i in range(n_groups) if indeg[i] == 0]
+    heap = [i for i in range(n_groups) if indeg[i] == 0]
+    heapq.heapify(heap)
     order = []
-    while stack:
-        # deterministic: smallest id first
-        stack.sort(reverse=True)
-        v = stack.pop()
+    while heap:
+        v = heapq.heappop(heap)
         order.append(v)
         for w in out[v]:
             indeg[w] -= 1
             if indeg[w] == 0:
-                stack.append(w)
+                heapq.heappush(heap, w)
     return order if len(order) == n_groups else None
 
 
@@ -91,11 +96,11 @@ def normalize(g: Graph, raw_groups: Sequence[Set[int]]) -> List[Set[int]]:
 
     # 2. break quotient cycles by topological bisection of offending groups
     for _ in range(g.n + 1):
-        gid = {}
+        gid_arr = [-1] * g.n  # -1 = uncovered; _quotient_edges raises on it
         for i, s in enumerate(groups):
             for v in s:
-                gid[v] = i
-        qedges = _quotient_edges(g, gid)
+                gid_arr[v] = i
+        qedges = _quotient_edges(g, gid_arr)
         order = _topo_order_quotient(len(groups), qedges)
         if order is not None:
             # renumber groups in quotient topological order
@@ -140,23 +145,58 @@ def split_to_fit(
     from .cost import CachedEvaluator  # local import to avoid cycle at module load
 
     ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    return split_to_fit_batch(g, [(groups, acc)], ev, max_rounds=max_rounds)[0]
+
+
+def split_to_fit_batch(
+    g: Graph,
+    items: Sequence[Tuple[List[Set[int]], AcceleratorConfig]],
+    ev: "CachedEvaluator",
+    max_rounds: int = 64,
+) -> List[List[Set[int]]]:
+    """Batched in-situ tuning: repair many plans against one evaluator batch
+    per round.
+
+    Round ``k`` collects every still-unrepaired plan's multi-node subgraphs
+    into one feasibility batch (where the engine's executor parallelism
+    applies), then applies the split decisions — the same decisions, in the
+    same order, as running :func:`split_to_fit` per item, since feasibility
+    of one subgraph never depends on the others.
+    """
+    out: List[Optional[List[Set[int]]]] = [None] * len(items)
+    groups_of_item: List[List[Set[int]]] = [list(gr) for gr, _ in items]
+    active = list(range(len(items)))
     for _ in range(max_rounds):
-        changed = False
-        new: List[Set[int]] = []
-        for s in groups:
-            if len(s) == 1:
-                new.append(s)
-                continue
-            c = ev.subgraph(s, acc)
-            if c.feasible:
-                new.append(s)
+        if not active:
+            break
+        queries = [(s, items[i][1]) for i in active
+                   for s in groups_of_item[i] if len(s) > 1]
+        costs = ev.evaluate_batch(queries)
+        pos = 0
+        still_active: List[int] = []
+        for i in active:
+            changed = False
+            new: List[Set[int]] = []
+            for s in groups_of_item[i]:
+                if len(s) == 1:
+                    new.append(s)
+                    continue
+                c = costs[pos]
+                pos += 1
+                if c.feasible:
+                    new.append(s)
+                else:
+                    new.extend(split_group_topo(g, s, pieces=2))
+                    changed = True
+            groups_of_item[i] = new
+            if changed:
+                still_active.append(i)
             else:
-                new.extend(split_group_topo(g, s, pieces=2))
-                changed = True
-        groups = new
-        if not changed:
-            return normalize(g, groups)
-    return normalize(g, [{v} for s in groups for v in s])
+                out[i] = normalize(g, new)
+        active = still_active
+    for i in active:  # max_rounds exhausted: fall back to singletons
+        out[i] = normalize(g, [{v} for s in groups_of_item[i] for v in s])
+    return out  # type: ignore[return-value]
 
 
 def singleton_partition(g: Graph) -> List[Set[int]]:

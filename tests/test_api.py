@@ -1,5 +1,5 @@
 """Unified exploration API: spec/result serialization, strategy registry
-parity, determinism, and the deprecated shims."""
+parity, and determinism."""
 
 import math
 from dataclasses import replace
@@ -25,11 +25,8 @@ from repro.api import (
 from repro.core import (
     AcceleratorConfig,
     CachedEvaluator,
-    CoccoResult,
     HWSpace,
     Objective,
-    co_explore,
-    partition_only,
     singleton_partition,
 )
 
@@ -253,30 +250,14 @@ def test_same_spec_same_result(strategy, options):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims
+# removed shims (core.cocco keeps only a pointer docstring)
 # ---------------------------------------------------------------------------
 
-def test_partition_only_shim_still_works():
-    with pytest.deprecated_call():
-        res = partition_only(small_graph(), sample_budget=200, population=10,
-                             seed=0)
-    assert isinstance(res, CoccoResult)
-    assert res.plan.feasible
-    costs = [c for _, c in res.history]
-    assert all(b <= a + 1e-9 for a, b in zip(costs, costs[1:]))
+def test_deprecated_shims_are_gone():
+    import repro.core
+    import repro.core.cocco as cocco
 
-
-def test_co_explore_shim_matches_new_api():
-    g1, g2 = small_graph(), small_graph()
-    with pytest.deprecated_call():
-        old = co_explore(g1, mode="shared", metric="energy", alpha=0.002,
-                         sample_budget=300, population=20, seed=1)
-    new = run(ExploreSpec(workload="dd", strategy="ga",
-                          objective=Objective(metric="energy", alpha=0.002),
-                          hw=HWSpace(mode="shared"),
-                          sample_budget=300, seed=1,
-                          options=GAOptions(population=20)),
-              graph=g2)
-    assert old.cost == new.cost
-    assert old.groups == new.groups
-    assert old.acc == new.acc
+    for name in ("co_explore", "partition_only", "CoccoResult"):
+        assert not hasattr(cocco, name)
+        assert not hasattr(repro.core, name)
+    assert "repro.api" in (cocco.__doc__ or "")

@@ -12,8 +12,7 @@ from repro.core.baselines import (
     run_sa,
     run_two_step,
 )
-from repro.core.ga import HWSpace
-from repro.core import partition_only
+from repro.core.ga import HWSpace, run_ga
 from conftest import small_graph
 
 KB = 1 << 10
@@ -27,9 +26,10 @@ def test_enumeration_is_optimal_on_small_graph():
     res = enumerate_partitions(g, acc, obj, ev=ev)
     assert res.complete and res.groups is not None
     # GA should match the enumeration optimum on a small graph (paper §5.2)
-    ga = partition_only(g, acc, metric="ema", sample_budget=2000,
-                        population=40, seed=0, ev=ev)
-    assert math.isclose(ga.plan.ema_total, res.plan.ema_total, rel_tol=1e-9)
+    ga = run_ga(g, obj, HWSpace(mode="fixed", base=acc), sample_budget=2000,
+                population=40, seed=0, ev=ev)
+    assert math.isclose(ga.best.plan.ema_total, res.plan.ema_total,
+                        rel_tol=1e-9)
 
 
 def test_greedy_runs_and_is_feasible():

@@ -93,3 +93,46 @@ def test_module_entrypoint_subprocess():
         cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr
     assert "rank" in proc.stdout and "best:" in proc.stdout
+
+
+def test_explore_eval_jobs_matches_serial(tmp_path, capsys):
+    serial_out = tmp_path / "serial.json"
+    parallel_out = tmp_path / "parallel.json"
+    base = ["explore", "--workload", "vgg16", "--strategy", "ga",
+            "--budget", "200", "--opt", "population=10"]
+    assert main(base + ["--out", str(serial_out)]) == 0
+    assert main(base + ["--eval-jobs", "2",
+                        "--out", str(parallel_out)]) == 0
+    capsys.readouterr()
+    assert parallel_out.read_text() == serial_out.read_text()
+
+
+def test_store_ls_and_gc_cli(tmp_path, capsys):
+    store_dir = tmp_path / "store"
+    rc = main(["explore", "--workload", "vgg16", "--strategy", "greedy",
+               "--store-dir", str(store_dir)])
+    assert rc == 0
+    capsys.readouterr()
+
+    assert main(["store", "ls", "--store-dir", str(store_dir)]) == 0
+    out = capsys.readouterr().out
+    assert "vgg16" in out and "greedy" in out and "1 entries" in out
+
+    assert main(["store", "gc", "--store-dir", str(store_dir),
+                 "--max-bytes", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "evicted 1 entries" in out
+
+    assert main(["store", "ls", "--store-dir", str(store_dir)]) == 0
+    assert "0 entries" in capsys.readouterr().out
+
+
+def test_store_cli_without_dir_exits():
+    import os
+    env_had = os.environ.pop("REPRO_STORE_DIR", None)
+    try:
+        with pytest.raises(SystemExit, match="store maintenance"):
+            main(["store", "ls"])
+    finally:
+        if env_had is not None:
+            os.environ["REPRO_STORE_DIR"] = env_had

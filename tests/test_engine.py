@@ -1,0 +1,219 @@
+"""Batched evaluation engine: pure kernel, executor backends, and the
+backend-invariance contract (every backend returns identical results)."""
+
+import random
+from dataclasses import asdict, replace
+
+import pytest
+from conftest import small_graph
+
+from repro.api import ExploreSpec, GAOptions, SAOptions, run
+from repro.core import (
+    AcceleratorConfig,
+    CachedEvaluator,
+    CostKernel,
+    HWSpace,
+    Objective,
+    compute_structure,
+    evaluate_subgraph,
+    finish_cost,
+    make_executor,
+    random_partition,
+    split_to_fit,
+    split_to_fit_batch,
+)
+from repro.core.engine import ProcessExecutor, SerialExecutor, VectorExecutor
+from repro.core.netlib import build
+
+KB = 1 << 10
+
+
+def fixed_spec(**kw):
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    defaults = dict(
+        workload="dd",
+        strategy="ga",
+        objective=Objective(metric="energy", alpha=0.002),
+        hw=HWSpace(mode="shared", base=acc),
+        sample_budget=300,
+        seed=0,
+        options=GAOptions(population=20),
+    )
+    defaults.update(kw)
+    return ExploreSpec(**defaults)
+
+
+def random_queries(g, n_parts=12, seed=0):
+    """A corpus of (subgraph, hardware-point) queries over random partitions."""
+    rng = random.Random(seed)
+    hw = HWSpace(mode="separate")
+    queries = []
+    for _ in range(n_parts):
+        acc = hw.sample(rng)
+        for s in random_partition(g, rng, mean_size=rng.uniform(1.5, 6.0)):
+            queries.append((frozenset(s), acc))
+    return queries
+
+
+# ---------------------------------------------------------------------------
+# the pure kernel
+# ---------------------------------------------------------------------------
+
+def test_kernel_equals_evaluate_subgraph():
+    g = build("resnet50")
+    kernel = CostKernel(g)
+    for nodes, acc in random_queries(g, n_parts=4):
+        assert asdict(kernel.cost(nodes, acc)) == \
+            asdict(evaluate_subgraph(g, set(nodes), acc))
+
+
+def test_structure_finish_split_is_pure():
+    g = small_graph()
+    nodes = {0, 1, 2, 3}
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    st1 = compute_structure(g, nodes)
+    st2 = compute_structure(g, nodes)
+    assert st1 == st2                      # deterministic, value-comparable
+    assert finish_cost(st1, acc) == finish_cost(st2, acc)
+    # the structure half never depends on the hardware point
+    assert st1 == compute_structure(g, set(nodes))
+
+
+# ---------------------------------------------------------------------------
+# evaluate_batch
+# ---------------------------------------------------------------------------
+
+def test_evaluate_batch_matches_serial_subgraph_calls():
+    g = small_graph()
+    queries = random_queries(g, n_parts=6)
+    ev_a, ev_b = CachedEvaluator(g), CachedEvaluator(g)
+    batch = ev_a.evaluate_batch([(set(n), acc) for n, acc in queries])
+    serial = [ev_b.subgraph(set(n), acc) for n, acc in queries]
+    assert [asdict(c) for c in batch] == [asdict(c) for c in serial]
+    assert ev_a.lookups == ev_b.lookups
+    assert ev_a.evaluations == ev_b.evaluations  # distinct misses only
+
+
+def test_evaluate_batch_dedupes_and_preserves_order():
+    g = small_graph()
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    ev = CachedEvaluator(g)
+    qs = [({0}, acc), ({1}, acc), ({0}, acc), ({0, 1}, acc), ({1}, acc)]
+    costs = ev.evaluate_batch(qs)
+    assert [c.nodes for c in costs] == [(0,), (1,), (0,), (0, 1), (1,)]
+    assert ev.evaluations == 3             # {0}, {1}, {0,1} computed once each
+    assert ev.lookups == 5
+
+
+def test_split_to_fit_batch_matches_per_item():
+    g = build("resnet50")
+    rng = random.Random(3)
+    acc = AcceleratorConfig(glb_bytes=64 * KB, wbuf_bytes=72 * KB)
+    items = [([set(range(g.n))], acc)]
+    items += [(random_partition(g, rng, mean_size=8.0), acc)
+              for _ in range(3)]
+    batched = split_to_fit_batch(g, [([set(s) for s in gr], a)
+                                     for gr, a in items], CachedEvaluator(g))
+    for (gr, a), got in zip(items, batched):
+        assert got == split_to_fit(g, [set(s) for s in gr], a,
+                                   ev=CachedEvaluator(g))
+
+
+# ---------------------------------------------------------------------------
+# executor backends
+# ---------------------------------------------------------------------------
+
+def test_vector_backend_equals_scalar_kernel_exactly():
+    g = build("resnet50")
+    queries = random_queries(g, n_parts=12, seed=7)
+    scalar = CostKernel(g)
+    vec = VectorExecutor()
+    got = vec.evaluate(CostKernel(g), queries)
+    want = [scalar.cost(nodes, acc) for nodes, acc in queries]
+    for a, b in zip(got, want):
+        assert asdict(a) == asdict(b)      # exact equality, floats included
+
+
+def test_vector_backend_streaming_and_overflow_paths():
+    g = build("resnet50")
+    # tiny buffers force streaming (singletons) and overflow (multi-node)
+    accs = [AcceleratorConfig(glb_bytes=2 * KB, wbuf_bytes=2 * KB),
+            AcceleratorConfig(glb_bytes=4 * KB, wbuf_bytes=0, shared=True),
+            AcceleratorConfig(glb_bytes=512 * KB, wbuf_bytes=1 * KB)]
+    queries = [(frozenset({v}), acc) for v in range(0, g.n, 5)
+               for acc in accs]
+    queries += [(frozenset({v, v + 1}), acc)
+                for v in range(0, g.n - 1, 7) for acc in accs]
+    got = VectorExecutor().evaluate(CostKernel(g), queries)
+    kernel = CostKernel(g)
+    reasons = set()
+    for (nodes, acc), a in zip(queries, got):
+        assert asdict(a) == asdict(kernel.cost(nodes, acc))
+        reasons.add(a.reason.split(" in ")[0])
+    assert "streamed" in reasons           # the corpus exercised streaming
+
+
+def test_process_executor_matches_serial():
+    g = small_graph()
+    queries = random_queries(g, n_parts=6, seed=2)
+    ex = ProcessExecutor(jobs=2)
+    try:
+        got = ex.evaluate(CostKernel(g), queries)
+    finally:
+        ex.close()
+    want = SerialExecutor().evaluate(CostKernel(g), queries)
+    assert [asdict(c) for c in got] == [asdict(c) for c in want]
+
+
+def test_make_executor_resolution():
+    assert isinstance(make_executor(None, 1), SerialExecutor)
+    ex = make_executor(None, 3)
+    assert isinstance(ex, ProcessExecutor) and ex.jobs == 3
+    assert isinstance(make_executor("vector", 1), VectorExecutor)
+    with pytest.raises(ValueError, match="unknown eval backend"):
+        make_executor("gpu", 1)
+
+
+# ---------------------------------------------------------------------------
+# backend invariance of whole strategy runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,jobs", [("process", 2), ("vector", 1)])
+def test_parallel_ga_bitwise_identical_to_serial(backend, jobs):
+    spec = fixed_spec()
+    serial = run(spec, graph=small_graph())
+    other = run(spec, graph=small_graph(), eval_backend=backend,
+                eval_jobs=jobs)
+    assert other.to_json() == serial.to_json()
+
+
+def test_parallel_sa_and_enum_identical_to_serial():
+    for strategy, options in (("sa", SAOptions()), ("enum", None)):
+        spec = fixed_spec(strategy=strategy, options=options)
+        serial = run(spec, graph=small_graph())
+        parallel = run(spec, graph=small_graph(), eval_jobs=2)
+        assert parallel.to_json() == serial.to_json(), strategy
+
+
+def test_count_run_distinct_queries_invariant_across_backends():
+    spec = fixed_spec()
+    counts = {}
+    for backend, jobs in (("serial", 1), ("process", 2), ("vector", 1)):
+        res = run(spec, graph=small_graph(), eval_backend=backend,
+                  eval_jobs=jobs)
+        counts[backend] = res.evaluations
+    assert len(set(counts.values())) == 1, counts
+
+def test_search_result_evaluations_invariant_across_backends():
+    """run_ga's raw SearchResult.evaluations (true cache misses), not just
+    the distinct-query count run() reports, must not depend on the backend."""
+    from repro.core import run_ga
+    counts = []
+    for backend, jobs in (("serial", 1), ("process", 2), ("vector", 1)):
+        g = small_graph()
+        ev = CachedEvaluator(g, executor=make_executor(backend, jobs))
+        res = run_ga(g, Objective(metric="ema", alpha=None), HWSpace(),
+                     sample_budget=60, population=10, seed=0, ev=ev)
+        ev.close()
+        counts.append(res.evaluations)
+    assert len(set(counts)) == 1, counts

@@ -12,12 +12,10 @@ from repro.core import (
     Graph,
     HWSpace,
     Objective,
-    co_explore,
     groups_of,
     is_valid,
     normalize,
     partition_of,
-    partition_only,
     random_partition,
     run_ga,
     singleton_partition,
@@ -88,26 +86,29 @@ def test_split_to_fit_produces_feasible_plan():
 def test_ga_beats_singletons_on_small_graph():
     g = small_graph()
     acc = AcceleratorConfig(glb_bytes=64 * KB, wbuf_bytes=72 * KB)
-    res = partition_only(g, acc, metric="ema", sample_budget=600,
-                         population=30, seed=0)
+    res = run_ga(g, Objective(metric="ema", alpha=None),
+                 HWSpace(mode="fixed", base=acc), sample_budget=600,
+                 population=30, seed=0)
     ev = CachedEvaluator(g)
     single = ev.plan(singleton_partition(g), acc)
-    assert res.plan.ema_total <= single.ema_total
-    assert res.plan.feasible
+    assert res.best.plan.ema_total <= single.ema_total
+    assert res.best.plan.feasible
 
 
 def test_ga_co_explore_returns_grid_capacity():
     g = small_graph()
-    res = co_explore(g, mode="shared", sample_budget=400, population=20,
-                     seed=1)
+    res = run_ga(g, Objective(metric="energy", alpha=0.002),
+                 HWSpace(mode="shared"), sample_budget=400,
+                 population=20, seed=1)
     from repro.core import SHARED_CANDIDATES
-    assert res.acc.shared
-    assert res.acc.glb_bytes in SHARED_CANDIDATES
-    assert res.plan.feasible
+    assert res.best.acc.shared
+    assert res.best.acc.glb_bytes in SHARED_CANDIDATES
+    assert res.best.plan.feasible
 
 
 def test_ga_history_monotone():
     g = small_graph()
-    res = partition_only(g, sample_budget=300, population=20, seed=3)
+    res = run_ga(g, Objective(metric="ema", alpha=None), HWSpace(),
+                 sample_budget=300, population=20, seed=3)
     costs = [c for _, c in res.history]
     assert all(b <= a + 1e-9 for a, b in zip(costs, costs[1:]))

@@ -279,3 +279,53 @@ def test_evaluations_independent_of_cache_warmth():
     ts = run(fixed_spec(strategy="two_step", options=None,
                         sample_budget=200), graph=small_graph())
     assert ts.evaluations > 0
+
+
+# ---------------------------------------------------------------------------
+# maintenance: ls / gc (cross-run eviction)
+# ---------------------------------------------------------------------------
+
+def _fill_store(tmp_path, n=4):
+    store = ResultStore(tmp_path / "store")
+    g = small_graph()
+    specs = [fixed_spec(strategy="greedy",
+                        options=GreedyOptions(eval_budget=100 + i))
+             for i in range(n)]
+    for i, spec in enumerate(specs):
+        run(spec, graph=g, store=store)
+        # well-separated mtimes so LRU order is deterministic on coarse fs
+        entry = store.path_for(spec)
+        import os
+        os.utime(entry, (1_000_000 + i, 1_000_000 + i))
+    return store, specs
+
+
+def test_store_entries_are_lru_ordered(tmp_path):
+    store, specs = _fill_store(tmp_path)
+    entries = store.entries()
+    assert [e.key for e in entries] == [spec_key(s) for s in specs]
+    assert all(e.size > 0 for e in entries)
+    assert all(e.workload == "dd" and e.strategy == "greedy"
+               for e in entries)
+
+
+def test_store_gc_evicts_oldest_down_to_cap(tmp_path):
+    store, specs = _fill_store(tmp_path)
+    sizes = [e.size for e in store.entries()]
+    cap = sizes[-1] + sizes[-2]  # room for exactly the two newest
+    removed, freed = store.gc(max_bytes=cap)
+    assert removed == 2 and freed == sizes[0] + sizes[1]
+    kept = {e.key for e in store.entries()}
+    assert kept == {spec_key(s) for s in specs[2:]}
+    assert store.total_bytes() <= cap
+    # the evicted specs re-search and re-populate on the next run
+    again = run(specs[0], graph=small_graph(), store=store)
+    assert again.feasible and specs[0] in store
+
+
+def test_store_gc_zero_cap_clears_everything_and_corrupt(tmp_path):
+    store, _ = _fill_store(tmp_path, n=2)
+    (store.root / "junk.json.corrupt").write_text("{}")
+    removed, _ = store.gc(max_bytes=0)
+    assert removed == 3
+    assert store.total_bytes() == 0 and len(store) == 0

@@ -4,9 +4,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import ExploreSpec, GAOptions, run
 from repro.configs import ARCHS, SHAPES, get_config
 from repro.configs.shapes import cells_for, skip_reason
-from repro.core import AcceleratorConfig, CachedEvaluator, co_explore
+from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
 from repro.core.netlib import build
 from repro.core.partition import is_valid, partition_of, singleton_partition
 from repro.core.tpu_adapter import build_block_graph, plan_architecture
@@ -16,8 +17,12 @@ def test_cocco_end_to_end_on_resnet50():
     """The paper's core loop: co-explore, get a valid feasible plan that
     beats the unfused singleton execution."""
     g = build("resnet50")
-    res = co_explore(g, mode="shared", metric="energy", alpha=0.002,
-                     sample_budget=1500, population=40, seed=0)
+    res = run(ExploreSpec(workload="resnet50", strategy="ga",
+                          objective=Objective(metric="energy", alpha=0.002),
+                          hw=HWSpace(mode="shared"),
+                          sample_budget=1500, seed=0,
+                          options=GAOptions(population=40)),
+              graph=g)
     assert res.plan.feasible
     assert is_valid(g, partition_of(res.groups, g.n))
     ev = CachedEvaluator(g)
