@@ -1,0 +1,69 @@
+"""Workload-family sweep: GA vs greedy vs DP external traffic across all
+four workload-URI schemes (`netlib:` / `tpu:` / `synthetic:` / `file:`).
+
+The paper evaluates Cocco on its six netlists; this sweep stresses the same
+search strategies on every *family* the workload resolver can name — a CNN
+netlist, a TPU transformer block, and seeded synthetic DAGs — plus a
+`file:` import round-tripped through the Graph JSON format (the bench
+exports one of the synthetic graphs and re-resolves it from disk, so the
+import path is exercised end to end).
+
+Emits ``workloads.<family>.<strategy>,us,EMA=..`` rows; like every
+partition benchmark it runs through :func:`common.compare_cached`, so
+``--store-dir`` makes re-runs instant and ``--jobs`` fans strategies out.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.api import ExploreSpec, GAOptions, build_workload
+from repro.core.ga import HWSpace, Objective
+from repro.core.graph import graph_to_json
+
+from .common import POPULATION, Timer, compare_cached, emit, fmt_mb
+
+STRATEGIES = ["ga", "greedy", "dp"]
+
+# one representative per scheme; budgets stay reduced-mode friendly
+WORKLOADS = [
+    ("netlib", "netlib:resnet50"),
+    ("tpu", "tpu:gemma3-4b:0?tokens=2048"),
+    ("synthetic_layered", "synthetic:layered:24?seed=7"),
+    ("synthetic_branchy", "synthetic:branchy:24?seed=3"),
+]
+
+
+def _file_workload() -> str:
+    """Export a synthetic graph to Graph JSON and resolve it back via file:."""
+    out = Path("runs") / "bench" / "workload_diamond.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(graph_to_json(build_workload("synthetic:diamond:16?seed=5")))
+    return f"file:{out}"
+
+
+def main(budget: int = 2_000) -> None:
+    for family, uri in WORKLOADS + [("file", _file_workload())]:
+        spec = ExploreSpec(
+            workload=uri,
+            strategy="ga",
+            objective=Objective(metric="ema", alpha=None),
+            hw=HWSpace(mode="fixed"),
+            sample_budget=budget,
+            seed=0,
+            options=GAOptions(population=min(POPULATION, 40)),
+        )
+        t = Timer()
+        results = compare_cached(spec, STRATEGIES)
+        per_strategy = t.us / max(len(results), 1)
+        for res in results:
+            ema = res.plan.ema_total if res.plan is not None else float("inf")
+            emit(f"workloads.{family}.{res.strategy}", per_strategy,
+                 f"EMA={fmt_mb(ema)}")
+
+
+if __name__ == "__main__":
+    from .common import configure
+
+    configure()
+    main()

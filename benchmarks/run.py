@@ -30,6 +30,7 @@ from . import (
     bench_roofline,
     bench_table3,
     bench_tables12,
+    bench_workloads,
 )
 
 BENCHES = {
@@ -38,6 +39,7 @@ BENCHES = {
     "tables12": bench_tables12.main,
     "fig12_13_14": bench_fig12_13_14.main,
     "table3": bench_table3.main,
+    "workloads": bench_workloads.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
 }

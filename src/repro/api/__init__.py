@@ -16,6 +16,12 @@ archived, shared, and reproduced bit-for-bit from its artifact.  Use
 evaluator (``jobs=N`` fans them out over worker processes), a
 :class:`ResultStore` to make re-runs of any already-searched spec instant,
 and :func:`register_strategy` to plug in new methods.
+
+Workloads are URIs resolved by :mod:`repro.api.workloads`
+(``netlib:resnet50``, ``tpu:gemma3-4b:0``, ``synthetic:layered:24?seed=7``,
+``file:graph.json``; bare names alias to ``netlib:``) — see
+:func:`register_workload_scheme` to add a scheme, and
+``python -m repro workloads ls`` to enumerate what resolves.
 """
 
 from .registry import (
@@ -35,8 +41,16 @@ from .spec import (
     TwoStepOptions,
 )
 from .result import ExploreResult
-from .store import ResultStore, StoreEntry, spec_key
-from .strategies import build_workload, compare, plan_tpu, run
+from .store import ResultStore, StoreEntry, graph_fingerprint, spec_key
+from .strategies import compare, plan_tpu, run
+from .workloads import (
+    WorkloadScheme,
+    build_workload,
+    list_workloads,
+    parse_workload,
+    register_workload_scheme,
+    workload_schemes,
+)
 
 __all__ = [
     "DPOptions",
@@ -51,12 +65,18 @@ __all__ = [
     "Strategy",
     "StrategyEntry",
     "TwoStepOptions",
+    "WorkloadScheme",
     "build_workload",
     "compare",
     "get_strategy",
+    "graph_fingerprint",
     "list_strategies",
+    "list_workloads",
+    "parse_workload",
     "plan_tpu",
     "register_strategy",
+    "register_workload_scheme",
     "run",
     "spec_key",
+    "workload_schemes",
 ]

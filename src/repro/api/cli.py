@@ -7,9 +7,15 @@ Subcommands:
 * ``compare``   — run several strategies on the same spec (one shared cost
                   evaluator, optionally ``--jobs N`` worker processes) and
                   print a ranked table.
+* ``workloads`` — ``ls`` every resolvable workload URI (scheme registry:
+                  ``netlib:`` / ``tpu:`` / ``synthetic:`` / ``file:``).
 * ``store``     — ``ls`` the spec-addressed result store, or ``gc`` it down
                   to a byte cap (LRU by artifact mtime).
 * ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
+
+``--workload`` takes a URI (a bare name is ``netlib:<name>``): e.g.
+``netlib:resnet50``, ``tpu:gemma3-4b:0?tokens=4096``,
+``synthetic:layered:24?seed=7``, ``file:my_net.json``.
 
 ``--store-dir`` (or ``$REPRO_STORE_DIR``) points both ``explore`` and
 ``compare`` at a spec-addressed result store: a spec that was already
@@ -23,8 +29,11 @@ Examples::
     python -m repro explore --workload resnet50 --strategy ga \
         --metric energy --alpha 0.002 --hw-mode shared --budget 4000 \
         --eval-jobs 4
-    python -m repro compare --workload vgg16 --strategies greedy,dp,ga \
-        --jobs 4 --store-dir runs/store
+    python -m repro workloads ls --scheme tpu
+    python -m repro explore --workload "tpu:gemma3-4b:0?tokens=4096" \
+        --strategy ga --budget 2000
+    python -m repro compare --workload "synthetic:layered:24?seed=7" \
+        --strategies greedy,dp,ga --jobs 4 --store-dir runs/store
     python -m repro store gc --store-dir runs/store --max-bytes 100000000
     python -m repro plan-tpu --arch glm4-9b --samples 2000
 """
@@ -204,6 +213,25 @@ def cmd_store_gc(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_workloads_ls(args: argparse.Namespace) -> int:
+    from .workloads import list_workloads, workload_schemes
+
+    # --uris-only is the script-friendly contract: every printed line is a
+    # concrete URI that `explore --workload <line>` resolves; the default
+    # view may show compact templates (tpu:<arch>:0..N) alongside the table
+    rows = list_workloads(args.scheme, concrete=args.uris_only)
+    if not args.uris_only:
+        _print_table([{
+            "scheme": s.name,
+            "syntax": s.syntax,
+            "description": s.description,
+        } for s in workload_schemes()])
+        print()
+    for uri, _note in rows:
+        print(uri)
+    return 0
+
+
 def cmd_plan_tpu(args: argparse.Namespace) -> int:
     from repro.configs import ARCHS
 
@@ -218,7 +246,11 @@ def cmd_plan_tpu(args: argparse.Namespace) -> int:
 def _add_spec_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--spec", help="load an ExploreSpec JSON file "
                                   "(overrides the flags below)")
-    p.add_argument("--workload", help="netlib model name, e.g. resnet50")
+    p.add_argument("--workload",
+                   help="workload URI: netlib:<model> (bare names alias "
+                        "here), tpu:<config>:<layer>[?tokens=N&tp=K], "
+                        "synthetic:<kind>:<n>[?seed=S], file:<path>.json; "
+                        "see `repro workloads ls`")
     p.add_argument("--strategy", default="ga",
                    help=f"one of: {', '.join(list_strategies())}")
     p.add_argument("--metric", default="ema",
@@ -276,6 +308,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     pc.add_argument("--out", metavar="PATH",
                     help="write all ExploreResult JSONs here (a list)")
     pc.set_defaults(fn=cmd_compare)
+
+    pw = sub.add_parser("workloads",
+                        help="list resolvable workload URIs")
+    wsub = pw.add_subparsers(dest="workloads_cmd", required=True)
+    pwl = wsub.add_parser("ls", help="schemes + every enumerable workload")
+    pwl.add_argument("--scheme", default=None,
+                     help="limit to one scheme (netlib, tpu, synthetic, "
+                          "file, or a registered custom scheme)")
+    pwl.add_argument("--uris-only", action="store_true",
+                     help="print only concrete, resolvable URIs — every "
+                          "line works as --workload (script-friendly; "
+                          "no scheme table, no templates)")
+    pwl.set_defaults(fn=cmd_workloads_ls)
 
     ps = sub.add_parser("store",
                         help="inspect / garbage-collect a result store")

@@ -147,7 +147,11 @@ SPEC_VERSION = 1
 class ExploreSpec:
     """One fully-specified exploration run.
 
-    ``workload`` is a :data:`repro.core.netlib.PAPER_MODELS` name unless the
+    ``workload`` is a workload URI resolved by
+    :func:`repro.api.workloads.build_workload` — ``netlib:<model>`` (a bare
+    name aliases here), ``tpu:<config>:<layer>``, ``synthetic:<kind>:<n>``,
+    ``file:<path>.json``, or any scheme added via
+    :func:`~repro.api.workloads.register_workload_scheme` — unless the
     caller passes an explicit graph to :func:`repro.api.run` (then it is a
     free-form label).  ``options`` is the registered strategy's typed option
     dataclass; ``None`` resolves to that strategy's defaults.
@@ -163,6 +167,13 @@ class ExploreSpec:
     options: Any = None
 
     def __post_init__(self) -> None:
+        # Fail malformed workload URIs at spec construction, not mid-search.
+        # Scheme-less names stay free-form (netlib aliases / custom-graph
+        # labels); anything with a ``:`` must parse under a registered
+        # scheme.  Syntax-only: no graph is built, no file is touched.
+        from .workloads import validate_workload
+
+        validate_workload(self.workload)
         if self.options is None:
             cls = options_class_for(self.strategy)
             if cls is not None:

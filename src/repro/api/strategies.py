@@ -44,24 +44,7 @@ from .spec import (
     TwoStepOptions,
 )
 from .store import ResultStore, graph_fingerprint, spec_key
-
-
-def build_workload(name: str) -> Graph:
-    """Resolve a spec's workload name to a netlib graph."""
-    from repro.core import netlib
-
-    try:
-        builder = netlib.PAPER_MODELS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown workload {name!r}; known: {sorted(netlib.PAPER_MODELS)}"
-        ) from None
-    try:
-        return builder()
-    except ModuleNotFoundError as err:
-        raise RuntimeError(
-            f"workload {name!r} needs an optional dependency: {err}"
-        ) from err
+from .workloads import build_workload  # re-export: the one resolution path
 
 
 def _make_evaluator(g: Graph, out_tile: int, eval_backend: Optional[str],
@@ -102,16 +85,23 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
     number of *distinct* (subgraph, hardware-point) cost-model queries the
     strategy issued — see :class:`ExploreResult` for the exact semantics.
     """
+    from .workloads import workload_is_stable
+
     use_store = store is not None and not runtime
     if use_store:
         cached = store.get(spec)
         if cached is not None:
-            # a custom graph= shares only the workload *label* with the
-            # spec; refuse another graph's artifact (store keys carry no
-            # graph identity)
-            if (graph is None
+            # Store keys carry no graph identity, so refuse another graph's
+            # artifact: a custom graph= shares only the workload *label*
+            # with the spec, and a non-stable workload URI (file: — the
+            # file can change under an unchanged URI) must be re-resolved
+            # and fingerprint-checked before its artifact replays.
+            g_check = graph
+            if g_check is None and not workload_is_stable(spec.workload):
+                g_check = graph = build_workload(spec.workload)
+            if (g_check is None
                     or cached.meta.get("graph_sha")
-                    in (None, graph_fingerprint(graph))):
+                    in (None, graph_fingerprint(g_check))):
                 return cached
     g = graph if graph is not None else build_workload(spec.workload)
     created_ev = ev is None

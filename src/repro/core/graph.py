@@ -18,8 +18,9 @@ Simba-like platform.
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 SLIDING = "sliding"
 FULL = "full"
@@ -102,6 +103,9 @@ class Graph:
             raise ValueError(f"bad edge ({src},{dst})")
         if src >= dst:
             raise ValueError("insertion order must be topological: src < dst")
+        if kind not in (SLIDING, FULL):
+            raise ValueError(
+                f"edge kind must be {SLIDING!r} or {FULL!r}, got {kind!r}")
         if kind == SLIDING:
             if F < 1 or s < 1:
                 raise ValueError("sliding edge needs F>=1, s>=1")
@@ -212,6 +216,108 @@ class Graph:
             f"{self.total_weight_bytes()/1e6:.2f} MB weights, "
             f"{self.total_act_bytes()/1e6:.2f} MB activations"
         )
+
+
+# ---------------------------------------------------------------------------
+# Graph JSON: a documented import/export format for external netlists
+# ---------------------------------------------------------------------------
+#
+# {
+#   "format": "cocco-graph", "version": 1, "name": "<label>",
+#   "nodes": [{"name", "out_len", "line_bytes", "weight_bytes", "macs",
+#              "is_output"}, ...],            # index order == topological order
+#   "edges": [{"src", "dst", "F", "s", "kind"}, ...]   # kind: sliding | full
+# }
+#
+# Node order is significant (node i is the i-th entry; edges must satisfy
+# src < dst), matching the in-memory invariant that insertion order is a
+# valid topological order.  Optional node/edge fields take their dataclass
+# defaults, so a minimal external netlist only needs names, shapes, and arcs.
+
+GRAPH_FORMAT = "cocco-graph"
+GRAPH_FORMAT_VERSION = 1
+
+
+def graph_to_dict(g: Graph) -> Dict[str, Any]:
+    """Serialize ``g`` to the documented Graph JSON dict (lossless)."""
+    return {
+        "format": GRAPH_FORMAT,
+        "version": GRAPH_FORMAT_VERSION,
+        "name": g.name,
+        "nodes": [
+            {
+                "name": v.name,
+                "out_len": v.out_len,
+                "line_bytes": v.line_bytes,
+                "weight_bytes": v.weight_bytes,
+                "macs": v.macs,
+                "is_output": v.is_output,
+            }
+            for v in g.nodes
+        ],
+        "edges": [
+            {"src": e.src, "dst": e.dst, "F": e.F, "s": e.s, "kind": e.kind}
+            for e in g.edges
+        ],
+    }
+
+
+def graph_from_dict(d: Dict[str, Any]) -> Graph:
+    """Build a :class:`Graph` from a Graph JSON dict, validating the format
+    header, node dimensions (``out_len >= 1``, byte/MAC counts ``>= 0``),
+    and — through ``add_node``/``add_edge`` — the construction-time
+    invariants (topological edge order, window sanity, known edge kinds)."""
+    if not isinstance(d, dict):
+        raise ValueError(f"not a {GRAPH_FORMAT} document: expected a JSON "
+                         f"object, got {type(d).__name__}")
+    if d.get("format") != GRAPH_FORMAT:
+        raise ValueError(f"not a {GRAPH_FORMAT} document "
+                         f"(format={d.get('format')!r})")
+    if d.get("version") != GRAPH_FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported {GRAPH_FORMAT} version {d.get('version')!r} "
+            f"(this build reads version {GRAPH_FORMAT_VERSION})")
+    g = Graph(str(d.get("name", "graph")))
+    for i, nd in enumerate(d.get("nodes", [])):
+        try:
+            name, out_len = str(nd["name"]), int(nd["out_len"])
+            line_bytes = int(nd["line_bytes"])
+        except KeyError as err:
+            raise ValueError(
+                f"node {i} is missing required key {err.args[0]!r} "
+                f"(nodes need name, out_len, line_bytes)") from None
+        wbytes, macs = int(nd.get("weight_bytes", 0)), int(nd.get("macs", 0))
+        if out_len < 1 or line_bytes < 0 or wbytes < 0 or macs < 0:
+            raise ValueError(
+                f"node {i} ({name!r}) has invalid dimensions: "
+                f"out_len={out_len} (need >=1), line_bytes={line_bytes}, "
+                f"weight_bytes={wbytes}, macs={macs} (need >=0)")
+        g.add_node(name, out_len, line_bytes, weight_bytes=wbytes,
+                   macs=macs, is_output=bool(nd.get("is_output", False)))
+    for i, ed in enumerate(d.get("edges", [])):
+        try:
+            src, dst = int(ed["src"]), int(ed["dst"])
+        except KeyError as err:
+            raise ValueError(
+                f"edge {i} is missing required key {err.args[0]!r} "
+                f"(edges need src, dst)") from None
+        g.add_edge(src, dst, F=int(ed.get("F", 1)), s=int(ed.get("s", 1)),
+                   kind=str(ed.get("kind", SLIDING)))
+    if not g.nodes:
+        raise ValueError(f"{GRAPH_FORMAT} document has no nodes")
+    return g
+
+
+def graph_to_json(g: Graph, indent: Optional[int] = 2) -> str:
+    return json.dumps(graph_to_dict(g), indent=indent)
+
+
+def graph_from_json(data: str) -> Graph:
+    try:
+        d = json.loads(data)
+    except json.JSONDecodeError as err:
+        raise ValueError(f"invalid graph JSON: {err}") from None
+    return graph_from_dict(d)
 
 
 def sequential_graph(

@@ -401,6 +401,10 @@ def nasnet(cells_per_stack: int = 4, c0: int = 44) -> Graph:
 # registry
 # ---------------------------------------------------------------------------
 
+# The single netlib table.  Every resolution surface — ``build`` here, the
+# ``netlib:`` workload scheme in :mod:`repro.api.workloads`, and the CLI's
+# ``workloads ls`` — consumes this dict, so the set of names cannot drift
+# between them (tests/test_netlib.py pins the parity).
 PAPER_MODELS = {
     "vgg16": vgg16,
     "resnet50": resnet50,
@@ -414,5 +418,16 @@ PAPER_MODELS = {
 }
 
 
+def list_models() -> List[str]:
+    return sorted(PAPER_MODELS)
+
+
 def build(name: str) -> Graph:
-    return PAPER_MODELS[name]()
+    """Build the named paper model; the one netlib resolution path."""
+    try:
+        builder = PAPER_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown netlib model {name!r}; known: {list_models()}"
+        ) from None
+    return builder()

@@ -127,6 +127,48 @@ def test_store_ls_and_gc_cli(tmp_path, capsys):
     assert "0 entries" in capsys.readouterr().out
 
 
+def test_workloads_ls_cli(capsys):
+    from repro.core.netlib import list_models
+
+    assert main(["workloads", "ls"]) == 0
+    out = capsys.readouterr().out
+    assert "netlib:resnet50" in out
+    assert "tpu:<config>:<layer>" in out
+    assert "synthetic:layered:<n>[?seed=S]" in out
+    assert "file:<path>.json" in out
+
+    assert main(["workloads", "ls", "--scheme", "netlib",
+                 "--uris-only"]) == 0
+    out = capsys.readouterr().out
+    assert out.split() == [f"netlib:{n}" for n in list_models()]
+
+    # --uris-only is script-friendly: every line is a concrete URI the
+    # resolver accepts (no templates like tpu:<arch>:0..N)
+    from repro.api import parse_workload
+    assert main(["workloads", "ls", "--uris-only"]) == 0
+    uris = capsys.readouterr().out.split()
+    assert uris and all(".." not in u and "<" not in u for u in uris)
+    for uri in uris:
+        parse_workload(uri)
+    assert "tpu:gemma3-4b:0" in uris and "tpu:gemma3-4b:33" in uris
+
+    assert main(["workloads", "ls", "--scheme", "bogus"]) == 2
+    assert "unknown workload scheme" in capsys.readouterr().err
+
+
+def test_explore_accepts_workload_uris(tmp_path, capsys):
+    out_path = tmp_path / "res.json"
+    rc = main(["explore", "--workload", "synthetic:layered:12?seed=1",
+               "--strategy", "greedy", "--out", str(out_path)])
+    assert rc == 0
+    assert "synthetic:layered:12?seed=1[greedy]" in capsys.readouterr().out
+    res = ExploreResult.from_json(out_path.read_text())
+    assert res.feasible and res.workload == "synthetic:layered:12?seed=1"
+
+    assert main(["explore", "--workload", "bogus:thing"]) == 2
+    assert "unknown workload scheme" in capsys.readouterr().err
+
+
 def test_store_cli_without_dir_exits():
     import os
     env_had = os.environ.pop("REPRO_STORE_DIR", None)

@@ -1,0 +1,123 @@
+"""Golden regression: seed-fixed GA/greedy results for one workload per URI
+scheme, pinned bitwise and asserted identical across the ``serial`` /
+``vector`` / ``process`` evaluation backends (the same invariance
+`tests/test_engine.py` pins for the engine itself).
+
+Golden artifacts live in ``tests/golden/``; regenerate them after an
+*intentional* cost-model or search change with::
+
+    PYTHONPATH=src python tests/test_golden_workloads.py --regen
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.api import ExploreSpec, GAOptions, GreedyOptions, run
+from repro.core import AcceleratorConfig, HWSpace, Objective
+
+KB = 1 << 10
+GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+FILE_GRAPH = GOLDEN_DIR / "workload_diamond.json"
+# golden artifacts must be machine-independent, so the file: workload's
+# absolute path is canonicalized to this repo-relative form before compare
+FILE_URI_CANON = "file:tests/golden/workload_diamond.json"
+
+WORKLOADS = {
+    "netlib_resnet50": "netlib:resnet50",
+    "tpu_gemma3-4b_L0": "tpu:gemma3-4b:0?tokens=512",
+    "synthetic_layered24": "synthetic:layered:24?seed=7",
+    "file_diamond": f"file:{FILE_GRAPH}",
+}
+
+STRATEGY_OPTIONS = {
+    "ga": GAOptions(population=10),
+    "greedy": GreedyOptions(eval_budget=2_000),
+}
+
+CASES = [(w, s) for w in WORKLOADS for s in STRATEGY_OPTIONS]
+
+
+def golden_spec(workload_key: str, strategy: str) -> ExploreSpec:
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    return ExploreSpec(
+        workload=WORKLOADS[workload_key],
+        strategy=strategy,
+        objective=Objective(metric="ema", alpha=None),
+        hw=HWSpace(mode="fixed", base=acc),
+        sample_budget=300,
+        seed=0,
+        options=STRATEGY_OPTIONS[strategy],
+    )
+
+
+def canonical_dict(res) -> dict:
+    """`ExploreResult` as a parsed-JSON dict (tuples already lowered to
+    lists, exactly what a golden file parses back to), with the
+    machine-local file: path replaced by its repo-relative form so goldens
+    compare bitwise everywhere."""
+    d = json.loads(res.to_json())
+    local_uri = WORKLOADS["file_diamond"]
+    if d["workload"] == local_uri:
+        d["workload"] = FILE_URI_CANON
+    if d.get("spec") and d["spec"]["workload"] == local_uri:
+        d["spec"]["workload"] = FILE_URI_CANON
+    return d
+
+
+def golden_path(workload_key: str, strategy: str) -> Path:
+    return GOLDEN_DIR / f"{workload_key}.{strategy}.json"
+
+
+@pytest.mark.parametrize("workload_key,strategy", CASES)
+def test_golden_result_pinned_across_backends(workload_key, strategy):
+    spec = golden_spec(workload_key, strategy)
+    golden = json.loads(golden_path(workload_key, strategy).read_text())
+
+    serial = canonical_dict(run(spec))
+    assert serial == golden, (
+        f"{workload_key}/{strategy} drifted from tests/golden/ — if the "
+        f"cost model or search changed intentionally, regenerate with "
+        f"`PYTHONPATH=src python tests/test_golden_workloads.py --regen`")
+    # backend invariance: vector and process compute the identical artifact
+    for backend, jobs in (("vector", 1), ("process", 2)):
+        got = canonical_dict(run(spec, eval_backend=backend, eval_jobs=jobs))
+        assert got == golden, f"{backend} backend diverged from golden"
+
+
+def test_checked_in_file_workload_is_valid_graph_json():
+    from repro.api import build_workload, graph_fingerprint
+    from repro.core.graph import graph_from_json
+
+    g = graph_from_json(FILE_GRAPH.read_text())
+    assert g.name == "golden_diamond" and g.n == 12
+    assert graph_fingerprint(build_workload(f"file:{FILE_GRAPH}")) == \
+        graph_fingerprint(g)
+
+
+def _regen() -> None:
+    from repro.api import build_workload
+    from repro.core.graph import graph_to_json
+
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    if not FILE_GRAPH.exists():
+        g = build_workload("synthetic:diamond:12?seed=5")
+        g.name = "golden_diamond"
+        FILE_GRAPH.write_text(graph_to_json(g))
+        print(f"wrote {FILE_GRAPH}")
+    for workload_key, strategy in CASES:
+        d = canonical_dict(run(golden_spec(workload_key, strategy)))
+        path = golden_path(workload_key, strategy)
+        path.write_text(json.dumps(d, indent=2) + "\n")
+        print(f"wrote {path}  (cost={d['cost']})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)
+        sys.exit(2)

@@ -48,6 +48,23 @@ def test_randwire_is_irregular_and_seeded():
     assert b.n != a1.n or b.total_weight_bytes() != a1.total_weight_bytes()
 
 
+def test_single_netlib_table_no_drift():
+    """PAPER_MODELS, netlib.build, and the `netlib:` workload scheme all
+    consume one table: the names each surface accepts are identical."""
+    from repro.core.netlib import list_models
+    from repro.api import build_workload, list_workloads
+
+    assert list_models() == sorted(PAPER_MODELS)
+    resolver_names = [uri.split(":", 1)[1]
+                      for uri, _ in list_workloads("netlib")]
+    assert resolver_names == list_models()
+    # build() and the resolver reject unknown names from the same table
+    with pytest.raises(ValueError, match="unknown netlib model"):
+        build("missing_model")
+    with pytest.raises(ValueError, match="unknown netlib model"):
+        build_workload("netlib:missing_model")
+
+
 def test_large_models_have_enough_nodes_for_search():
     for name in ("transformer", "gpt", "randwire_a", "randwire_b", "nasnet"):
         g = build(name)

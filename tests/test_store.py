@@ -77,6 +77,86 @@ def test_spec_key_stable_across_processes(tmp_path):
     assert keys == {spec_key(spec)}
 
 
+def _scheme_uris(tmp_path):
+    """One workload URI per built-in scheme (file: built on the fly)."""
+    from repro.api import build_workload
+    from repro.core.graph import graph_to_json
+
+    file_path = tmp_path / "net.json"
+    file_path.write_text(graph_to_json(
+        build_workload("synthetic:diamond:10?seed=2")))
+    return [
+        "netlib:vgg16",
+        "tpu:gemma3-4b:0?tokens=256",
+        "synthetic:layered:12?seed=1",
+        f"file:{file_path}",
+    ]
+
+
+def test_graph_fingerprint_stable_across_processes(tmp_path):
+    """Every scheme must build the same graph — same structural digest — in
+    a fresh interpreter, or the store's graph_sha replay check would
+    spuriously reject cross-process artifacts."""
+    from repro.api import build_workload, graph_fingerprint
+
+    uris = _scheme_uris(tmp_path)
+    code = (
+        "import sys; sys.path.insert(0, sys.argv[1])\n"
+        "from repro.api import build_workload, graph_fingerprint\n"
+        "for uri in sys.argv[2:]:\n"
+        "    print(graph_fingerprint(build_workload(uri)))\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code, str(REPO_SRC), *uris],
+        capture_output=True, text=True, check=True)
+    assert proc.stdout.split() == [
+        graph_fingerprint(build_workload(uri)) for uri in uris]
+
+
+def test_every_scheme_roundtrips_store_through_run_and_compare(tmp_path):
+    """Acceptance: all four URI schemes resolve through api.run/compare and
+    a second run of the same spec is a store hit with an identical
+    ExploreResult."""
+    from repro.api import GreedyOptions
+
+    store = ResultStore(tmp_path / "store")
+    for uri in _scheme_uris(tmp_path):
+        spec = fixed_spec(workload=uri, strategy="greedy",
+                          options=GreedyOptions(eval_budget=1_000))
+        misses0, hits0 = store.misses, store.hits
+        first = run(spec, store=store)
+        assert first.feasible and store.misses == misses0 + 1
+        again = run(spec, store=store)
+        assert store.hits == hits0 + 1
+        assert again.to_dict() == first.to_dict()
+        # compare() on the same spec is served from the same addresses
+        cmp_results = compare(spec, ["greedy", "dp"], store=store)
+        assert cmp_results[0].to_dict() == first.to_dict()
+        assert [r.strategy for r in cmp_results] == ["greedy", "dp"]
+
+
+def test_file_workload_change_invalidates_store_hit(tmp_path):
+    """file: URIs do not pin graph content, so a changed file under an
+    unchanged URI must re-search, not replay the stale artifact."""
+    from repro.api import GreedyOptions, build_workload
+    from repro.core.graph import graph_to_json
+
+    path = tmp_path / "net.json"
+    path.write_text(graph_to_json(build_workload("synthetic:diamond:10?seed=2")))
+    store = ResultStore(tmp_path / "store")
+    spec = fixed_spec(workload=f"file:{path}", strategy="greedy",
+                      options=GreedyOptions(eval_budget=1_000))
+    first = run(spec, store=store)
+
+    path.write_text(graph_to_json(build_workload("synthetic:layered:6?seed=9")))
+    second = run(spec, store=store)
+    assert second.meta["graph_sha"] != first.meta["graph_sha"]
+    assert sum(len(s) for s in second.groups) == 6     # the *new* graph
+    # the fresh artifact overwrote the stale one and now replays
+    third = run(spec, store=store)
+    assert third.to_dict() == second.to_dict()
+
+
 # ---------------------------------------------------------------------------
 # hit / miss round-trip
 # ---------------------------------------------------------------------------

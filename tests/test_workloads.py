@@ -1,0 +1,313 @@
+"""Workload resolver: URI schemes (`netlib:`/`tpu:`/`synthetic:`/`file:`),
+registry openness, spec-time validation, Graph JSON round-trip, and
+property-based invariants over the `synthetic:` generators."""
+
+import math
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.api import (
+    ExploreSpec,
+    GreedyOptions,
+    build_workload,
+    graph_fingerprint,
+    list_workloads,
+    parse_workload,
+    register_workload_scheme,
+    run,
+    workload_schemes,
+)
+from repro.core import AcceleratorConfig, CachedEvaluator, HWSpace, Objective
+from repro.core.graph import (
+    Graph,
+    graph_from_json,
+    graph_to_dict,
+    graph_to_json,
+)
+from repro.core.cost import compute_structure, evaluate_subgraph, finish_cost
+from repro.core.partition import is_valid, partition_of, random_partition, split_to_fit
+
+KB = 1 << 10
+
+SYNTH_KINDS = ("layered", "branchy", "diamond", "chain")
+
+
+def greedy_spec(uri, **kw):
+    defaults = dict(
+        workload=uri,
+        strategy="greedy",
+        objective=Objective(metric="ema", alpha=None),
+        hw=HWSpace(mode="fixed"),
+        sample_budget=200,
+        seed=0,
+        options=GreedyOptions(eval_budget=2_000),
+    )
+    defaults.update(kw)
+    return ExploreSpec(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# URI parsing + registry
+# ---------------------------------------------------------------------------
+
+def test_bare_name_aliases_to_netlib():
+    assert parse_workload("resnet50") == ("netlib", "resnet50", {})
+    assert graph_fingerprint(build_workload("resnet50")) == \
+        graph_fingerprint(build_workload("netlib:resnet50"))
+
+
+def test_unknown_scheme_and_model_errors():
+    with pytest.raises(ValueError, match="unknown workload scheme"):
+        build_workload("bogus:thing")
+    with pytest.raises(ValueError, match="unknown netlib model"):
+        build_workload("netlib:nope")
+    with pytest.raises(ValueError, match="unknown netlib model"):
+        build_workload("nope")                      # bare alias, same table
+    with pytest.raises(ValueError, match="empty workload"):
+        build_workload("")
+
+
+def test_query_string_is_strictly_parsed():
+    with pytest.raises(ValueError, match="unknown params"):
+        build_workload("synthetic:layered:8?sneed=3")     # typo'd key
+    with pytest.raises(ValueError, match="duplicate workload param"):
+        build_workload("synthetic:layered:8?seed=1&seed=2")
+    with pytest.raises(ValueError, match="not an integer"):
+        build_workload("synthetic:layered:8?seed=x")
+    with pytest.raises(ValueError, match="bad workload query"):
+        build_workload("synthetic:layered:8?seed")
+
+
+def test_register_custom_scheme_resolves_through_run():
+    @register_workload_scheme("twonode", syntax="twonode:<label>",
+                              description="test scheme")
+    def _build(rest, params):
+        g = Graph(f"twonode:{rest}")
+        a = g.add_node("a", 8, 64, weight_bytes=256, macs=1000)
+        b = g.add_node("b", 8, 64, weight_bytes=256, macs=1000,
+                       is_output=True)
+        g.add_edge(a, b)
+        return g
+
+    assert "twonode" in [s.name for s in workload_schemes()]
+    res = run(greedy_spec("twonode:x"))
+    assert res.feasible and sum(len(s) for s in res.groups) == 2
+
+
+def test_spec_validation_rejects_bad_uris_and_keeps_labels():
+    # registered schemes get full syntax validation at spec construction
+    with pytest.raises(ValueError, match="bad workload query"):
+        ExploreSpec(workload="synthetic:layered:8?seed")
+    with pytest.raises(ValueError, match="duplicate workload param"):
+        ExploreSpec(workload="synthetic:layered:8?seed=1&seed=2")
+    with pytest.raises(ValueError, match="empty workload"):
+        ExploreSpec(workload="")
+    # free-form labels (custom graphs passed via graph=, pre-resolver
+    # artifacts) remain legal — with or without a colon; an unregistered
+    # prefix only fails when something tries to *resolve* it
+    assert ExploreSpec(workload="dd").workload == "dd"
+    spec = ExploreSpec(workload="experiment:v2")
+    with pytest.raises(ValueError, match="unknown workload scheme"):
+        run(spec)
+
+
+def test_list_workloads_enumerates_every_scheme():
+    uris = [u for u, _ in list_workloads()]
+    assert "netlib:resnet50" in uris
+    assert any(u.startswith("tpu:gemma3-4b:") for u in uris)
+    assert any(u.startswith("synthetic:layered:") for u in uris)
+    assert any(u.startswith("file:") for u in uris)
+    only_tpu = [u for u, _ in list_workloads("tpu")]
+    assert only_tpu and all(u.startswith("tpu:") for u in only_tpu)
+    with pytest.raises(ValueError, match="unknown workload scheme"):
+        list_workloads("bogus")
+
+
+# ---------------------------------------------------------------------------
+# tpu: scheme
+# ---------------------------------------------------------------------------
+
+def test_tpu_scheme_builds_block_graphs_with_params():
+    g = build_workload("tpu:gemma3-4b:0?tokens=512")
+    assert g.n > 5 and any(v.is_output for v in g.nodes)
+    assert g.nodes[0].out_len == 512                  # rows = tokens
+    # underscore alias resolves to the same config
+    assert graph_fingerprint(g) == \
+        graph_fingerprint(build_workload("tpu:gemma3_4b:0?tokens=512"))
+    # tokens and tp both change the graph (and hence the fingerprint)
+    assert graph_fingerprint(g) != \
+        graph_fingerprint(build_workload("tpu:gemma3-4b:0?tokens=256"))
+    assert graph_fingerprint(g) != \
+        graph_fingerprint(build_workload("tpu:gemma3-4b:0?tokens=512&tp=8"))
+
+
+def test_tpu_scheme_errors():
+    with pytest.raises(ValueError, match="unknown tpu config"):
+        build_workload("tpu:notamodel:0")
+    with pytest.raises(ValueError, match="out of range"):
+        build_workload("tpu:gemma3-4b:999")
+    with pytest.raises(ValueError, match="needs a layer index"):
+        build_workload("tpu:gemma3-4b")
+    with pytest.raises(ValueError, match="must be an integer"):
+        build_workload("tpu:gemma3-4b:first")
+    with pytest.raises(ValueError, match="unknown params"):
+        build_workload("tpu:gemma3-4b:0?token=512")
+
+
+# ---------------------------------------------------------------------------
+# synthetic: scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", SYNTH_KINDS)
+def test_synthetic_deterministic_and_seed_sensitive(kind):
+    a = build_workload(f"synthetic:{kind}:16?seed=4")
+    b = build_workload(f"synthetic:{kind}:16?seed=4")
+    assert graph_fingerprint(a) == graph_fingerprint(b)
+    assert a.n == 16
+    other = build_workload(f"synthetic:{kind}:16?seed=5")
+    assert graph_fingerprint(a) != graph_fingerprint(other)
+
+
+def test_synthetic_errors():
+    with pytest.raises(ValueError, match="unknown synthetic kind"):
+        build_workload("synthetic:spiral:8")
+    with pytest.raises(ValueError, match="needs a node count"):
+        build_workload("synthetic:layered")
+    with pytest.raises(ValueError, match="n >= 2"):
+        build_workload("synthetic:layered:1")
+
+
+# ---------------------------------------------------------------------------
+# file: scheme + Graph JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_graph_json_roundtrip_is_lossless():
+    g = build_workload("synthetic:branchy:12?seed=9")
+    g2 = graph_from_json(graph_to_json(g))
+    assert graph_fingerprint(g) == graph_fingerprint(g2)
+    assert g2.name == g.name
+    assert [v.name for v in g2.nodes] == [v.name for v in g.nodes]
+    assert [(v.out_len, v.line_bytes, v.weight_bytes, v.macs, v.is_output)
+            for v in g2.nodes] == \
+           [(v.out_len, v.line_bytes, v.weight_bytes, v.macs, v.is_output)
+            for v in g.nodes]
+
+
+def test_file_scheme_resolves_and_validates(tmp_path):
+    g = build_workload("synthetic:diamond:10?seed=2")
+    path = tmp_path / "net.json"
+    path.write_text(graph_to_json(g))
+    loaded = build_workload(f"file:{path}")
+    assert graph_fingerprint(loaded) == graph_fingerprint(g)
+
+    with pytest.raises(ValueError, match="not found"):
+        build_workload(f"file:{tmp_path / 'missing.json'}")
+    bad = tmp_path / "bad.json"
+    bad.write_text("{ not json")
+    with pytest.raises(ValueError, match="invalid graph JSON"):
+        build_workload(f"file:{bad}")
+    wrong = tmp_path / "wrong.json"
+    wrong.write_text('{"format": "other", "version": 1}')
+    with pytest.raises(ValueError, match="not a cocco-graph"):
+        build_workload(f"file:{wrong}")
+    d = graph_to_dict(g)
+    d["version"] = 99
+    stale = tmp_path / "stale.json"
+    import json as _json
+    stale.write_text(_json.dumps(d))
+    with pytest.raises(ValueError, match="unsupported cocco-graph version"):
+        build_workload(f"file:{stale}")
+    # malformed netlists are load-time errors, not silent wrong costs
+    bad_dims = graph_to_dict(g)
+    bad_dims["nodes"][0]["out_len"] = 0
+    p = tmp_path / "dims.json"
+    p.write_text(_json.dumps(bad_dims))
+    with pytest.raises(ValueError, match="invalid dimensions"):
+        build_workload(f"file:{p}")
+    bad_kind = graph_to_dict(g)
+    bad_kind["edges"][0]["kind"] = "Full"          # case matters
+    p2 = tmp_path / "kind.json"
+    p2.write_text(_json.dumps(bad_kind))
+    with pytest.raises(ValueError, match="edge kind"):
+        build_workload(f"file:{p2}")
+    # missing required keys are ValueErrors naming the key, not KeyErrors
+    missing = graph_to_dict(g)
+    del missing["nodes"][0]["line_bytes"]
+    p3 = tmp_path / "missing.json"
+    p3.write_text(_json.dumps(missing))
+    with pytest.raises(ValueError, match="missing required key 'line_bytes'"):
+        build_workload(f"file:{p3}")
+
+
+def test_file_scheme_explores_end_to_end(tmp_path):
+    path = tmp_path / "net.json"
+    path.write_text(graph_to_json(build_workload("synthetic:layered:10?seed=3")))
+    res = run(greedy_spec(f"file:{path}"))
+    assert res.feasible and res.workload == f"file:{path}"
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants over synthetic: workloads
+# (skipped, still collecting, when hypothesis is absent — see
+#  tests/_hypothesis_compat)
+# ---------------------------------------------------------------------------
+
+@given(kind=st.sampled_from(SYNTH_KINDS), n=st.integers(2, 40),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_property_synthetic_graphs_wellformed(kind, n, seed):
+    """Generated graphs are DAGs with contiguous, topologically ordered
+    node ids, at least one output, and a deterministic fingerprint."""
+    uri = f"synthetic:{kind}:{n}?seed={seed}"
+    g = build_workload(uri)
+    assert g.n == n
+    assert [v.idx for v in g.nodes] == list(range(n))   # contiguous ids
+    for e in g.edges:
+        assert 0 <= e.src < e.dst < n                   # acyclic by order
+    assert any(v.is_output for v in g.nodes)
+    assert all(v.out_len >= 1 and v.line_bytes >= 1 for v in g.nodes)
+    # every non-source node is reachable: it has at least one in-edge
+    sources = g.sources()
+    assert all(g.in_edges(v) or v in sources for v in range(n))
+    assert graph_fingerprint(g) == graph_fingerprint(build_workload(uri))
+
+
+@given(kind=st.sampled_from(SYNTH_KINDS), n=st.integers(2, 24),
+       seed=st.integers(0, 1_000), pseed=st.integers(0, 1_000))
+@settings(max_examples=25, deadline=None)
+def test_property_partition_cost_finite_and_kernel_pure(kind, n, seed, pseed):
+    """Any legal partition of a synthetic graph evaluates to a finite cost,
+    and the pure kernel identity holds exactly:
+    ``evaluate_subgraph == finish_cost(compute_structure(...))``."""
+    g = build_workload(f"synthetic:{kind}:{n}?seed={seed}")
+    rng = random.Random(pseed)
+    groups = random_partition(g, rng, mean_size=rng.uniform(1.5, 5.0))
+    assert is_valid(g, partition_of(groups, g.n))
+    acc = AcceleratorConfig()            # paper-default buffers dwarf these
+    for s in groups:
+        cost = evaluate_subgraph(g, set(s), acc)
+        assert cost == finish_cost(compute_structure(g, set(s)), acc)
+    plan = CachedEvaluator(g).plan(groups, acc)
+    obj = Objective(metric="ema", alpha=None).cost(plan, acc)
+    assert math.isfinite(obj) and obj >= 0
+    assert math.isfinite(plan.energy_pj)
+
+
+@given(kind=st.sampled_from(SYNTH_KINDS), n=st.integers(2, 24),
+       seed=st.integers(0, 1_000), pseed=st.integers(0, 1_000))
+@settings(max_examples=25, deadline=None)
+def test_property_split_to_fit_never_over_capacity(kind, n, seed, pseed):
+    """In-situ tuning under starvation-level buffers: every returned group
+    fits (multi-node groups are feasible; singletons stream)."""
+    g = build_workload(f"synthetic:{kind}:{n}?seed={seed}")
+    rng = random.Random(pseed)
+    groups = random_partition(g, rng, mean_size=4.0)
+    acc = AcceleratorConfig(glb_bytes=2 * KB, wbuf_bytes=2 * KB)
+    ev = CachedEvaluator(g)
+    fitted = split_to_fit(g, groups, acc, ev=ev)
+    assert sorted(v for s in fitted for v in s) == list(range(g.n))
+    assert is_valid(g, partition_of(fitted, g.n))
+    for s in fitted:
+        assert ev.subgraph(set(s), acc).feasible, (sorted(s), acc)
