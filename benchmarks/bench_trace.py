@@ -1,0 +1,85 @@
+"""Trace-simulator sweep: strategies ranked by *simulated* peak bandwidth
+across all four workload-URI schemes.
+
+The analytical kernel ranks plans by EMA bytes; this bench re-ranks the
+same searches by what the time-stepped trace simulator (:mod:`repro.sim`)
+says about their bandwidth requirement — peak and p95 of the per-step
+DRAM bandwidth — and cross-validates every simulated plan against the
+analytical EMA on the way (a failed cross-validation is a bench error,
+not a silent wrong number).
+
+Emits ``trace.<family>.<rank>.<strategy>,us,peak=..`` rows where ``us`` is
+the simulation time per plan and ``rank`` orders strategies by simulated
+peak bandwidth (1 = lowest requirement, the paper's "lower bandwidth"
+claim).  Runs through :func:`common.compare_cached`, so ``--store-dir``
+replays the searches and only the simulation re-runs.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.api import ExploreSpec, GAOptions, build_workload
+from repro.core.ga import HWSpace, Objective
+from repro.core.graph import graph_to_json
+from repro.sim import cross_validate_trace, simulate_plan
+
+from .common import POPULATION, Timer, compare_cached, emit
+
+STRATEGIES = ["ga", "greedy", "dp", "sa"]
+
+# one representative per workload-URI scheme (file: is exported on demand)
+WORKLOADS = [
+    ("netlib", "netlib:resnet50"),
+    ("tpu", "tpu:gemma3-4b:0?tokens=2048"),
+    ("synthetic", "synthetic:pyramid:24?seed=7"),
+]
+
+
+def _file_workload() -> str:
+    out = Path("runs") / "bench" / "trace_diamond.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(graph_to_json(build_workload("synthetic:diamond:16?seed=5")))
+    return f"file:{out}"
+
+
+def main(budget: int = 2_000) -> None:
+    for family, uri in WORKLOADS + [("file", _file_workload())]:
+        spec = ExploreSpec(
+            workload=uri,
+            strategy="ga",
+            objective=Objective(metric="ema", alpha=None),
+            hw=HWSpace(mode="fixed"),
+            sample_budget=budget,
+            seed=0,
+            options=GAOptions(population=min(POPULATION, 40)),
+        )
+        g = build_workload(uri)
+        results = [r for r in compare_cached(spec, STRATEGIES, graph=g)
+                   if r.plan is not None and r.plan.feasible]
+        ranked = []
+        for res in results:
+            t = Timer()
+            trace = simulate_plan(g, res.groups, res.acc,
+                                  steps_per_subgraph=64)
+            us = t.us
+            report = cross_validate_trace(trace, res.plan)
+            if not report.ok:
+                raise AssertionError(
+                    f"{family}/{res.strategy}: {report.summary()}")
+            prof = trace.bandwidth_profile()
+            ranked.append((prof.peak, prof, res, us))
+        ranked.sort(key=lambda r: r[0])
+        for rank, (peak, prof, res, us) in enumerate(ranked, start=1):
+            emit(f"trace.{family}.{rank}.{res.strategy}", us,
+                 f"peak={peak / 1e9:.2f}GB/s "
+                 f"p95={prof.percentiles['p95'] / 1e9:.2f} "
+                 f"sustained={prof.sustained / 1e9:.2f} "
+                 f"EMA={prof.total_bytes / 1e6:.2f}MB xval=ok")
+
+
+if __name__ == "__main__":
+    from .common import configure
+
+    configure()
+    main()

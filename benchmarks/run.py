@@ -30,6 +30,7 @@ from . import (
     bench_roofline,
     bench_table3,
     bench_tables12,
+    bench_trace,
     bench_workloads,
 )
 
@@ -40,6 +41,7 @@ BENCHES = {
     "fig12_13_14": bench_fig12_13_14.main,
     "table3": bench_table3.main,
     "workloads": bench_workloads.main,
+    "trace": bench_trace.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
 }

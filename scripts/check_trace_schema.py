@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Validate a trace JSON file against the documented ``cocco-trace`` schema.
+
+Stdlib-only (runs in CI without the package on the path)::
+
+    python scripts/check_trace_schema.py runs/trace.json
+
+Checks the structural contract from ``docs/architecture.md`` ("Trace
+simulator" section) plus the internal invariants that make a trace
+trustworthy: totals are consistent with the per-step timeline, the
+bandwidth profile is internally ordered (p50 <= p95 <= p99 <= peak), and
+the embedded cross-validation verdict (if present) agrees with the
+totals.  Importable: ``validate_trace_dict(doc)`` returns a list of error
+strings (empty == valid), which `tests/test_cli.py` reuses.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List
+
+TRACE_FORMAT = "cocco-trace"
+TRACE_FORMAT_VERSION = 1
+
+_TOP_KEYS = {"format", "version", "graph", "acc", "out_tile", "groups",
+             "totals", "profile", "subgraphs"}
+_TOTAL_KEYS = {"dram_in", "dram_out", "dram_bytes", "cycles"}
+_PROFILE_KEYS = {"peak", "sustained", "p50", "p95", "p99", "total_bytes",
+                 "total_cycles"}
+_SUBGRAPH_KEYS = {"index", "nodes", "act_in", "act_out", "w_first",
+                  "w_stream", "stream_blocks", "cycles", "n_steps",
+                  "peak_occ_act", "peak_occ_w", "footprint", "region_count",
+                  "region_table_bytes"}
+_STEP_KEYS = {"subgraph", "step", "t_cycles", "cycles", "act_in", "act_out",
+              "w_in", "occ_act", "occ_w", "rows", "macs"}
+
+
+def _num(x: Any) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
+    """Return schema/invariant violations (empty list == valid trace)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"trace document must be an object, got {type(doc).__name__}"]
+    missing = _TOP_KEYS - set(doc)
+    if missing:
+        errs.append(f"missing top-level keys: {sorted(missing)}")
+        return errs
+    if doc["format"] != TRACE_FORMAT:
+        errs.append(f"format must be {TRACE_FORMAT!r}, got {doc['format']!r}")
+    if doc["version"] != TRACE_FORMAT_VERSION:
+        errs.append(f"unsupported version {doc['version']!r}")
+
+    totals = doc["totals"]
+    if not isinstance(totals, dict) or _TOTAL_KEYS - set(totals):
+        errs.append(f"totals needs keys {sorted(_TOTAL_KEYS)}")
+    else:
+        for k in _TOTAL_KEYS:
+            if not _num(totals[k]) or totals[k] < 0:
+                errs.append(f"totals.{k} must be a non-negative number")
+        if totals["dram_bytes"] != totals["dram_in"] + totals["dram_out"]:
+            errs.append("totals.dram_bytes != dram_in + dram_out")
+
+    prof = doc["profile"]
+    if not isinstance(prof, dict) or _PROFILE_KEYS - set(prof):
+        errs.append(f"profile needs keys {sorted(_PROFILE_KEYS)}")
+    else:
+        for k in _PROFILE_KEYS:
+            if not _num(prof[k]) or prof[k] < 0:
+                errs.append(f"profile.{k} must be a non-negative number")
+        eps = 1e-6
+        if not (prof["p50"] <= prof["p95"] * (1 + eps)
+                and prof["p95"] <= prof["p99"] * (1 + eps)
+                and prof["p99"] <= prof["peak"] * (1 + eps)):
+            errs.append("profile percentiles must satisfy "
+                        "p50 <= p95 <= p99 <= peak")
+        if isinstance(totals, dict) and "dram_bytes" in totals \
+                and prof.get("total_bytes") != totals["dram_bytes"]:
+            errs.append("profile.total_bytes != totals.dram_bytes")
+
+    subs = doc["subgraphs"]
+    if not isinstance(subs, list) or not subs:
+        errs.append("subgraphs must be a non-empty list")
+        subs = []
+    for i, sg in enumerate(subs):
+        if not isinstance(sg, dict) or _SUBGRAPH_KEYS - set(sg):
+            errs.append(f"subgraphs[{i}] needs keys "
+                        f"{sorted(_SUBGRAPH_KEYS)}")
+            continue
+        if sg["index"] != i:
+            errs.append(f"subgraphs[{i}].index must be {i}")
+        for k in ("act_in", "act_out", "w_first", "w_stream"):
+            if not isinstance(sg[k], int) or sg[k] < 0:
+                errs.append(f"subgraphs[{i}].{k} must be a "
+                            f"non-negative integer")
+        if not isinstance(sg["nodes"], list) or not sg["nodes"]:
+            errs.append(f"subgraphs[{i}].nodes must be a non-empty list")
+
+    if "steps" in doc:
+        steps = doc["steps"]
+        if not isinstance(steps, list) or not steps:
+            errs.append("steps, when present, must be a non-empty list")
+            steps = []
+        t_prev = -1.0
+        sums = {"act_in": 0, "act_out": 0, "w_in": 0}
+        for i, stp in enumerate(steps):
+            if not isinstance(stp, dict) or _STEP_KEYS - set(stp):
+                errs.append(f"steps[{i}] needs keys {sorted(_STEP_KEYS)}")
+                continue
+            if not _num(stp["cycles"]) or stp["cycles"] < 0:
+                errs.append(f"steps[{i}].cycles must be non-negative")
+            if not _num(stp["t_cycles"]):
+                errs.append(f"steps[{i}].t_cycles must be a number")
+            elif stp["t_cycles"] < t_prev - 1e-6:
+                errs.append(f"steps[{i}].t_cycles must be non-decreasing")
+            else:
+                t_prev = stp["t_cycles"]
+            for k in sums:
+                if isinstance(stp.get(k), int) and stp[k] >= 0:
+                    sums[k] += stp[k]
+                else:
+                    errs.append(f"steps[{i}].{k} must be a "
+                                f"non-negative integer")
+        if isinstance(totals, dict) and not (_TOTAL_KEYS - set(totals)):
+            if sums["act_in"] + sums["w_in"] != totals["dram_in"]:
+                errs.append("sum of step loads != totals.dram_in")
+            if sums["act_out"] != totals["dram_out"]:
+                errs.append("sum of step stores != totals.dram_out")
+
+    meta = doc.get("meta")
+    if isinstance(meta, dict) and isinstance(meta.get("validation"), dict):
+        val = meta["validation"]
+        if val.get("ok") is not True:
+            errs.append("meta.validation.ok is not true "
+                        "(simulated traffic drifted from the analytical EMA)")
+        elif isinstance(totals, dict) and \
+                val.get("total_simulated_bytes") != totals.get("dram_bytes"):
+            errs.append("meta.validation.total_simulated_bytes "
+                        "!= totals.dram_bytes")
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    path = argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        print(f"error: cannot read {path}: {err}", file=sys.stderr)
+        return 1
+    errs = validate_trace_dict(doc)
+    if errs:
+        for e in errs:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        print(f"{path}: INVALID ({len(errs)} errors)", file=sys.stderr)
+        return 1
+    n_steps = len(doc.get("steps", []))
+    print(f"{path}: valid {TRACE_FORMAT} v{TRACE_FORMAT_VERSION} — "
+          f"{len(doc['subgraphs'])} subgraphs, {n_steps} steps, "
+          f"{doc['totals']['dram_bytes']} DRAM bytes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

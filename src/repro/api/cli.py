@@ -7,8 +7,13 @@ Subcommands:
 * ``compare``   — run several strategies on the same spec (one shared cost
                   evaluator, optionally ``--jobs N`` worker processes) and
                   print a ranked table.
+* ``trace``     — search a plan (or load one with ``--plan``), execute it on
+                  the time-stepped trace simulator (:mod:`repro.sim`), print
+                  the bandwidth profile + analytical/simulated
+                  cross-validation, and optionally export the trace JSON.
 * ``workloads`` — ``ls`` every resolvable workload URI (scheme registry:
-                  ``netlib:`` / ``tpu:`` / ``synthetic:`` / ``file:``).
+                  ``netlib:`` / ``tpu:`` / ``synthetic:`` / ``file:``);
+                  ``--json`` emits a machine-readable listing for tooling.
 * ``store``     — ``ls`` the spec-addressed result store, or ``gc`` it down
                   to a byte cap (LRU by artifact mtime).
 * ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
@@ -35,6 +40,9 @@ Examples::
     python -m repro compare --workload "synthetic:layered:24?seed=7" \
         --strategies greedy,dp,ga --jobs 4 --store-dir runs/store
     python -m repro store gc --store-dir runs/store --max-bytes 100000000
+    python -m repro trace "synthetic:layered:24?seed=7" --strategy greedy \
+        --out runs/trace.json
+    python -m repro workloads ls --json
     python -m repro plan-tpu --arch glm4-9b --samples 2000
 """
 
@@ -46,6 +54,7 @@ import os
 import sys
 from typing import Any, Dict, List, Optional
 
+from repro.core.cost import METRICS
 from repro.core.ga import HWSpace, Objective
 
 from .registry import list_strategies, options_class_for
@@ -92,10 +101,19 @@ def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
     )
 
 
+def _write_file(path: str, payload: str) -> None:
+    """Write an artifact, creating parent directories (the documented
+    quickstarts use paths like runs/trace.json on fresh checkouts)."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        f.write(payload)
+
+
 def _maybe_save(path: Optional[str], payload: str) -> None:
     if path:
-        with open(path, "w") as f:
-            f.write(payload)
+        _write_file(path, payload)
 
 
 def _store_from_args(args: argparse.Namespace) -> Optional[ResultStore]:
@@ -216,6 +234,25 @@ def cmd_store_gc(args: argparse.Namespace) -> int:
 def cmd_workloads_ls(args: argparse.Namespace) -> int:
     from .workloads import list_workloads, workload_schemes
 
+    if args.json:
+        # machine-readable contract for tooling: every "workloads" entry is
+        # a concrete URI the resolver accepts (templates never appear here)
+        doc = {
+            "schemes": [{
+                "name": s.name,
+                "syntax": s.syntax,
+                "description": s.description,
+                "stable": s.stable,
+            } for s in workload_schemes()
+                if args.scheme in (None, s.name)],
+            "workloads": [{
+                "uri": uri,
+                "scheme": uri.split(":", 1)[0],
+                "description": note,
+            } for uri, note in list_workloads(args.scheme, concrete=True)],
+        }
+        print(json.dumps(doc, indent=2, sort_keys=True))
+        return 0
     # --uris-only is the script-friendly contract: every printed line is a
     # concrete URI that `explore --workload <line>` resolves; the default
     # view may show compact templates (tpu:<arch>:0..N) alongside the table
@@ -229,6 +266,66 @@ def cmd_workloads_ls(args: argparse.Namespace) -> int:
         print()
     for uri, _note in rows:
         print(uri)
+    return 0
+
+
+def cmd_trace(args: argparse.Namespace) -> int:
+    from repro.sim import cross_validate_trace, simulate_plan
+
+    from .workloads import build_workload
+
+    if getattr(args, "uri", None):
+        if args.workload and args.workload != args.uri:
+            raise SystemExit(
+                f"trace: conflicting workloads {args.uri!r} (positional) "
+                f"and {args.workload!r} (--workload); pass one")
+        args.workload = args.uri
+    if args.plan:
+        if args.workload or args.spec:
+            raise SystemExit(
+                "trace: --plan replays an archived result (with its own "
+                "workload); it cannot be combined with a workload URI or "
+                "--spec")
+        with open(args.plan) as f:
+            res = ExploreResult.from_json(f.read())
+        workload, strategy = res.workload, res.strategy
+        seed = res.spec.seed if res.spec else 0
+        out_tile = res.spec.out_tile if res.spec else 1
+    else:
+        spec = _spec_from_args(args)
+        store = _store_from_args(args)
+        res = run(spec, store=store, eval_backend=args.eval_backend,
+                  eval_jobs=args.eval_jobs)
+        workload, strategy = spec.workload, spec.strategy
+        seed, out_tile = spec.seed, spec.out_tile
+    if not res.groups or res.plan is None:
+        raise RuntimeError(
+            f"{workload}[{strategy}] found no feasible plan to trace")
+    g = build_workload(workload)
+    trace = simulate_plan(g, res.groups, res.acc, out_tile=out_tile,
+                          steps_per_subgraph=args.steps_per_subgraph)
+    report = cross_validate_trace(trace, res.plan)
+    prof = trace.bandwidth_profile()
+    print(f"{workload}[{strategy}]: {len(res.groups)} subgraphs, "
+          f"{len(trace.steps)} trace steps over "
+          f"{trace.total_cycles:.0f} cycles")
+    print(f"  DRAM traffic: {trace.total_dram_in / 1e6:.2f} MB in, "
+          f"{trace.total_dram_out / 1e6:.2f} MB out")
+    print(f"  bandwidth: peak={prof.peak / 1e9:.2f} GB/s  "
+          f"p99={prof.percentiles['p99'] / 1e9:.2f}  "
+          f"p95={prof.percentiles['p95'] / 1e9:.2f}  "
+          f"p50={prof.percentiles['p50'] / 1e9:.2f}  "
+          f"sustained={prof.sustained / 1e9:.2f} GB/s")
+    print(f"  {report.summary()}")
+    if args.out:
+        meta = {"workload": workload, "strategy": strategy, "seed": seed,
+                "validation": report.to_dict()}
+        _write_file(args.out,
+                    trace.to_json(meta=meta,
+                                  include_steps=not args.no_steps) + "\n")
+        print(f"  trace written to {args.out}")
+    if not report.ok:
+        raise RuntimeError(report.summary())
     return 0
 
 
@@ -253,8 +350,7 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                         "see `repro workloads ls`")
     p.add_argument("--strategy", default="ga",
                    help=f"one of: {', '.join(list_strategies())}")
-    p.add_argument("--metric", default="ema",
-                   choices=["ema", "energy", "latency"])
+    p.add_argument("--metric", default="ema", choices=list(METRICS))
     p.add_argument("--alpha", type=float, default=None,
                    help="Formula-2 weight (None => partition-only Formula 1)")
     p.add_argument("--hw-mode", default="fixed",
@@ -309,6 +405,28 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write all ExploreResult JSONs here (a list)")
     pc.set_defaults(fn=cmd_compare)
 
+    ptr = sub.add_parser(
+        "trace",
+        help="simulate a plan's DRAM traffic over time "
+             "(repro.sim trace simulator)")
+    ptr.add_argument("uri", nargs="?", default=None,
+                     help="workload URI (positional alias for --workload)")
+    _add_spec_args(ptr)
+    ptr.add_argument("--plan", metavar="PATH",
+                     help="trace an archived ExploreResult JSON instead of "
+                          "searching for a plan first")
+    ptr.add_argument("--steps-per-subgraph", type=int, default=None,
+                     metavar="N",
+                     help="coalesce each subgraph's row-granular steps to "
+                          "at most N buckets (totals are preserved; "
+                          "default: full row resolution)")
+    ptr.add_argument("--out", metavar="PATH",
+                     help="write the trace JSON here (cocco-trace format)")
+    ptr.add_argument("--no-steps", action="store_true",
+                     help="omit the per-step timeline from --out JSON "
+                          "(totals, profile, and per-subgraph rows stay)")
+    ptr.set_defaults(fn=cmd_trace)
+
     pw = sub.add_parser("workloads",
                         help="list resolvable workload URIs")
     wsub = pw.add_subparsers(dest="workloads_cmd", required=True)
@@ -320,6 +438,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="print only concrete, resolvable URIs — every "
                           "line works as --workload (script-friendly; "
                           "no scheme table, no templates)")
+    pwl.add_argument("--json", action="store_true",
+                     help="machine-readable output: {schemes, workloads} "
+                          "with concrete URIs only (for tooling)")
     pwl.set_defaults(fn=cmd_workloads_ls)
 
     ps = sub.add_parser("store",

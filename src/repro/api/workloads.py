@@ -10,9 +10,9 @@ Every :class:`ExploreSpec` names its workload as a URI ``<scheme>:<rest>``
   :func:`repro.core.tpu_adapter.build_block_graph` (rows = tokens); this
   makes the MoE/Mamba/ViT block graphs explorable by every strategy.
 * ``synthetic:<kind>:<n>[?seed=S&...]`` — seeded random DAG generators
-  (``layered`` | ``branchy`` | ``diamond`` | ``chain``) for stress and fuzz
-  workloads; deterministic in the URI, so fingerprints and store keys are
-  stable across processes.
+  (``layered`` | ``branchy`` | ``diamond`` | ``chain`` | ``pyramid``) for
+  stress and fuzz workloads; deterministic in the URI, so fingerprints and
+  store keys are stable across processes.
 * ``file:<path>.json`` — import an external netlist in the documented Graph
   JSON format (:func:`repro.core.graph.graph_to_json` exports it).
 
@@ -414,11 +414,62 @@ def _gen_chain(n: int, seed: int, rows: int) -> Graph:
     return _mark_sinks_as_outputs(g)
 
 
+def _gen_pyramid(n: int, seed: int, rows: int) -> Graph:
+    """Stride pyramid with multi-input merges: rows halve level by level
+    (non-uniform row counts across the graph), each level chains a few
+    same-rate nodes, and merge nodes additionally consume a stride-matched
+    skip edge from an *earlier* level — the mixed-rate fan-in shape the
+    consumption-centric rate solver (tiling stage 3) has to balance."""
+    rng = random.Random(seed)
+    g = Graph(f"synthetic:pyramid:{n}?seed={seed}")
+    cur_rows = max(rows, 2)
+    prev = _random_node(g, rng, "p0.stem", cur_rows)
+    levels: List[List[int]] = [[prev]]
+    level_rows: List[int] = [cur_rows]
+    while g.n < n:
+        # new level: stride-2 downsample from the previous level's tail
+        # (window F=s keeps f(k) = F + (k-1)s within the producer's rows)
+        nxt_rows = max(1, cur_rows // 2)
+        s_down = min(2, cur_rows)
+        down = _random_node(g, rng, f"p{len(levels)}.down", nxt_rows)
+        g.add_edge(prev, down, F=s_down, s=s_down)
+        level = [down]
+        prev, cur_rows = down, nxt_rows
+        for _ in range(rng.randint(0, 2)):          # same-rate body nodes
+            if g.n >= n:
+                break
+            v = _random_node(g, rng, f"p{len(levels)}.c{g.n}", cur_rows)
+            g.add_edge(prev, v, F=1, s=1)
+            level.append(v)
+            prev = v
+        if g.n < n:
+            # multi-input merge: level tail + a skip from an earlier level,
+            # stride chosen so the window stays inside the skip source
+            merge = g.add_node(f"p{len(levels)}.merge", cur_rows,
+                               g.nodes[prev].line_bytes,
+                               macs=2 * cur_rows * g.nodes[prev].line_bytes)
+            g.add_edge(prev, merge, F=1, s=1)
+            j = rng.randrange(len(levels))
+            src = rng.choice(levels[j])
+            if cur_rows > 1:
+                s_skip = min(2 ** (len(levels) - j),
+                             max(1, (level_rows[j] - 1) // (cur_rows - 1)))
+            else:
+                s_skip = 1
+            g.add_edge(src, merge, F=1, s=s_skip)
+            level.append(merge)
+            prev = merge
+        levels.append(level)
+        level_rows.append(cur_rows)
+    return _mark_sinks_as_outputs(g)
+
+
 _SYNTHETIC_KINDS = {
     "layered": _gen_layered,
     "branchy": _gen_branchy,
     "diamond": _gen_diamond,
     "chain": _gen_chain,
+    "pyramid": _gen_pyramid,
 }
 
 

@@ -5,6 +5,7 @@ The paper's primary contribution (ASPLOS'24).  See DESIGN.md §1–2.
 
 from .cost import (
     GLB_CANDIDATES,
+    METRICS,
     SHARED_CANDIDATES,
     WBUF_CANDIDATES,
     AcceleratorConfig,
@@ -13,10 +14,12 @@ from .cost import (
     PlanCost,
     SubgraphCost,
     SubgraphStructure,
+    TrafficBreakdown,
     compute_structure,
     evaluate_partition,
     evaluate_subgraph,
     finish_cost,
+    time_weighted_percentile,
 )
 from .engine import (
     Executor,
@@ -36,6 +39,7 @@ from .ga import (
 from .graph import FULL, SLIDING, Edge, Graph, Node, sequential_graph
 from .memory import (
     FootprintReport,
+    OccupancyTracker,
     Region,
     RegionTable,
     build_region_table,

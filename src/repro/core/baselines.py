@@ -108,6 +108,11 @@ def dp_partition(
     ev: Optional[CachedEvaluator] = None,
 ) -> Tuple[List[Set[int]], PlanCost, int]:
     ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    # the recurrence sums per-subgraph costs, so decompose by the additive
+    # objective (for non-additive metrics: the documented ema surrogate —
+    # see Objective.decomposition); the caller scores the plan we return
+    # with the true objective
+    objective = objective.decomposition()
     order = _depth_order(g)
     n = g.n
     INF = math.inf
@@ -175,9 +180,12 @@ def enumerate_partitions(
 ) -> EnumResult:
     """Exact DP: dp[ideal] = min partition cost of the ideal, transitioning by
     appending one feasible connected subgraph whose union is again an ideal.
-    The per-layer cost is additive, so this is optimal.  Exponential in the
-    graph's antichain structure — budgeted."""
+    The per-layer cost is additive, so this is optimal (non-additive
+    metrics decompose by ``Objective.decomposition()``'s ema surrogate and
+    the caller re-scores the plan with the true objective).  Exponential in
+    the graph's antichain structure — budgeted."""
     ev = ev or CachedEvaluator(g, out_tile=out_tile)
+    objective = objective.decomposition()
     preds = [set(g.preds(v)) for v in range(g.n)]
     succs = [set(g.succs(v)) for v in range(g.n)]
     full = frozenset(range(g.n))

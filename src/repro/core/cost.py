@@ -35,6 +35,17 @@ from .tiling import derive_schedule
 KB = 1024
 MB = 1024 * 1024
 
+# every metric PlanCost.metric / Objective accept; "bandwidth" is the
+# percentile of the plan's traffic-segment profile (see traffic_segments)
+METRICS: Tuple[str, ...] = ("ema", "energy", "latency", "bandwidth")
+BANDWIDTH_PERCENTILE = 95.0
+
+# reason prefix _stream_single_layer stamps on a streamed subgraph; the
+# single definition both writers and readers (traffic_breakdown) share —
+# the word is part of serialized artifacts, so change it only with a
+# golden regeneration
+STREAM_REASON = "streamed"
+
 
 @dataclass(frozen=True)
 class AcceleratorConfig:
@@ -71,6 +82,52 @@ WBUF_CANDIDATES = [k * KB for k in range(144, 2304 + 1, 72)]
 SHARED_CANDIDATES = [k * KB for k in range(128, 3072 + 1, 64)]
 
 
+@dataclass(frozen=True)
+class TrafficBreakdown:
+    """How one subgraph's DRAM traffic decomposes over its lifetime.
+
+    ``weight_first`` is loaded once before the subgraph starts (and is what
+    the next-subgraph weight prefetch moves under the previous subgraph's
+    compute); ``weight_stream`` is re-streamed *during* execution by a
+    single-layer row-block sweep (``stream_blocks`` sweeps total, 1 = no
+    streaming).  Invariant: ``weight_first + weight_stream == ema_w``.
+    This is the per-subgraph hook :mod:`repro.sim` lowers into a timeline.
+    """
+
+    ema_in: int
+    ema_out: int
+    weight_first: int
+    weight_stream: int
+    stream_blocks: int
+
+    @property
+    def total(self) -> int:
+        return self.ema_in + self.ema_out + self.weight_first \
+            + self.weight_stream
+
+
+def time_weighted_percentile(pairs: Sequence[Tuple[float, float]],
+                             p: float) -> float:
+    """Percentile ``p`` (0..100) of ``value`` weighted by ``weight``.
+
+    ``pairs`` is (value, weight); zero-weight pairs are ignored.  Returns
+    the smallest value v such that at least p% of the total weight lies at
+    values <= v — the step-function percentile the trace simulator and the
+    plan-level bandwidth metric share, so both layers agree exactly.
+    """
+    live = [(v, w) for v, w in pairs if w > 0]
+    if not live:
+        return 0.0
+    live.sort(key=lambda vw: vw[0])
+    total = sum(w for _, w in live)
+    acc = 0.0
+    for v, w in live:
+        acc += w
+        if acc >= (p / 100.0) * total - 1e-12 * total:
+            return v
+    return live[-1][0]
+
+
 @dataclass
 class SubgraphCost:
     nodes: Tuple[int, ...]
@@ -97,6 +154,24 @@ class SubgraphCost:
 
     def latency_cycles(self, acc: AcceleratorConfig) -> float:
         return max(self.compute_cycles(acc), self.io_cycles(acc))
+
+    def traffic_breakdown(self) -> TrafficBreakdown:
+        """Split ``ema_*`` into the phases the trace simulator executes.
+
+        Streaming is recovered from the cost itself (``ema_w`` is
+        ``weight_resident * n_blocks`` when ``_stream_single_layer`` ran),
+        so round-tripped plans decompose identically to fresh ones.
+        """
+        streamed = self.reason.startswith(STREAM_REASON)
+        if streamed and self.weight_resident > 0:
+            first = self.weight_resident
+            blocks = self.ema_w // self.weight_resident
+        else:
+            first = self.ema_w
+            blocks = 1
+        return TrafficBreakdown(
+            ema_in=self.ema_in, ema_out=self.ema_out, weight_first=first,
+            weight_stream=self.ema_w - first, stream_blocks=max(blocks, 1))
 
     def energy_pj(self, acc: AcceleratorConfig) -> float:
         if acc.shared:
@@ -146,16 +221,63 @@ class PlanCost:
         return self.ema_total / lat if lat > 0 else 0.0
 
     def peak_bandwidth(self) -> float:
-        """max over subgraphs of (act IO + next subgraph's weight prefetch) /
-        subgraph latency (paper Fig. 3 caption)."""
-        peak = 0.0
-        for i, s in enumerate(self.subgraphs):
-            nxt_w = (self.subgraphs[i + 1].ema_w
-                     if i + 1 < len(self.subgraphs) else 0)
-            lat = s.latency_cycles(self.acc) / self.acc.freq_hz
-            if lat > 0:
-                peak = max(peak, (s.ema_in + s.ema_out + nxt_w) / lat)
-        return peak
+        """max segment bandwidth requirement over the plan's timeline
+        (paper Fig. 3 caption: act IO + the next subgraph's weight prefetch
+        over each subgraph's latency, plus any single-layer block
+        re-streaming; the link-bound weight prologue is excluded).  One
+        timeline model with :meth:`traffic_segments`, so this equals the
+        trace simulator's peak at one-step-per-subgraph resolution by
+        construction."""
+        freq = self.acc.freq_hz
+        return max((bytes_ / cycles * freq
+                    for bytes_, cycles in self.traffic_segments()
+                    if cycles > 0), default=0.0)
+
+    def prologue_traffic(self) -> Tuple[int, float]:
+        """``(bytes, cycles)`` of the initial weight load before subgraph 0.
+
+        The prologue streams the first subgraph's resident weights at the
+        DRAM link rate with nothing to overlap, so its duration is defined
+        *by* the interface rate — its bandwidth is the link rate by
+        construction and carries no plan-dependent requirement signal,
+        which is why it is excluded from :meth:`traffic_segments` (it still
+        counts toward totals and sustained bandwidth).
+        """
+        if not self.subgraphs:
+            return (0, 0.0)
+        first0 = self.subgraphs[0].traffic_breakdown().weight_first
+        return (first0, first0 / self.acc.dram_bytes_per_cycle)
+
+    def traffic_segments(self) -> List[Tuple[int, float]]:
+        """``(dram_bytes, duration_cycles)`` per bandwidth-requirement
+        segment: one per subgraph.
+
+        Each segment's duration is the analytical subgraph latency and its
+        bytes are the activations crossing DRAM, any single-layer weight
+        re-streaming, and the *next* subgraph's prefetched weights
+        (double-buffered under this subgraph's compute, paper Fig. 3).
+        The weight prologue is deliberately excluded — it is link-bound by
+        construction (see :meth:`prologue_traffic`).  This is exactly what
+        :func:`repro.sim.simulate_plan` produces when its row-granular
+        steps are coalesced to one step per subgraph — the trace layer's
+        profile statistics pin that equivalence.
+        """
+        segs: List[Tuple[int, float]] = []
+        subs = self.subgraphs
+        for i, s in enumerate(subs):
+            b = s.traffic_breakdown()
+            nxt = (subs[i + 1].traffic_breakdown().weight_first
+                   if i + 1 < len(subs) else 0)
+            segs.append((b.ema_in + b.ema_out + b.weight_stream + nxt,
+                         s.latency_cycles(self.acc)))
+        return segs
+
+    def bandwidth_percentile(self, p: float = BANDWIDTH_PERCENTILE) -> float:
+        """Time-weighted percentile of segment bandwidth, in bytes/s."""
+        freq = self.acc.freq_hz
+        pairs = [(bytes_ / cycles * freq, cycles)
+                 for bytes_, cycles in self.traffic_segments() if cycles > 0]
+        return time_weighted_percentile(pairs, p)
 
     def metric(self, name: str) -> float:
         if name == "ema":
@@ -164,7 +286,11 @@ class PlanCost:
             return self.energy_pj
         if name == "latency":
             return self.latency_cycles
-        raise ValueError(name)
+        if name == "bandwidth":
+            return self.bandwidth_percentile()
+        raise ValueError(
+            f"unknown plan metric {name!r}; valid metrics: "
+            f"{', '.join(METRICS)}")
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +436,7 @@ def _stream_single_layer(sc: SubgraphCost, glb_cap: int) -> None:
     n_blocks = max(1, math.ceil(sc.footprint / max(glb_cap, 1)))
     sc.ema_w = sc.weight_resident * n_blocks
     sc.footprint = min(sc.footprint, glb_cap)
-    sc.reason = f"streamed in {n_blocks} blocks"
+    sc.reason = f"{STREAM_REASON} in {n_blocks} blocks"
 
 
 class CostKernel:

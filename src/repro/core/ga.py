@@ -24,6 +24,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .cost import (
     GLB_CANDIDATES,
+    METRICS,
     SHARED_CANDIDATES,
     WBUF_CANDIDATES,
     AcceleratorConfig,
@@ -45,12 +46,46 @@ from .partition import (
 # objective
 # ---------------------------------------------------------------------------
 
+# metrics that are additive over subgraphs: plan.metric(m) equals the sum
+# of single-subgraph contributions, which is what the additive recurrences
+# of the dp/enum baselines require.  "bandwidth" (a time-weighted
+# percentile) is not additive — see Objective.decomposition().
+ADDITIVE_METRICS: Tuple[str, ...] = ("ema", "energy", "latency")
+
+
 @dataclass(frozen=True)
 class Objective:
     """What the search minimizes."""
 
-    metric: str = "energy"          # "ema" | "energy" | "latency"
+    metric: str = "energy"          # one of cost.METRICS
     alpha: Optional[float] = None   # None => Formula 1 (partition-only)
+
+    def __post_init__(self) -> None:
+        # fail typos at construction (and hence at ExploreSpec construction),
+        # not thousands of samples into a search
+        if self.metric not in METRICS:
+            raise ValueError(
+                f"unknown objective metric {self.metric!r}; valid metrics: "
+                f"{', '.join(METRICS)}")
+
+    @property
+    def is_additive(self) -> bool:
+        return self.metric in ADDITIVE_METRICS
+
+    def decomposition(self) -> "Objective":
+        """The objective the additive-DP baselines (dp/enum) decompose by.
+
+        Their recurrences sum per-subgraph costs, which is exact only for
+        additive metrics.  For the non-additive ``bandwidth`` percentile
+        they decompose by the additive ``ema`` surrogate — the byte count
+        the bandwidth requirement derives from — and the caller scores the
+        returned plan with the *true* objective (so ``ExploreResult.cost``
+        is always the real metric, never the surrogate).  Whole-plan
+        strategies (ga/sa/greedy/two_step) optimize every metric directly.
+        """
+        if self.is_additive:
+            return self
+        return replace(self, metric="ema")
 
     def cost(self, plan: PlanCost, acc: AcceleratorConfig) -> float:
         m = plan.metric(self.metric)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Mapping, Optional, Set, Tuple
 
 from .graph import Graph
 from .tiling import SubgraphSchedule, derive_schedule
@@ -127,15 +127,62 @@ def subgraph_footprint(
     return FootprintReport(total, per, main_total, side_total, fits)
 
 
+@dataclass
+class OccupancyTracker:
+    """Time-stepped occupancy accounting over one subgraph's regions.
+
+    Models the consumption-centric steady state: each tensor's resident
+    rows grow as rows are produced (or streamed from DRAM) and are capped
+    at the region allocation ``x`` — the eviction scheme frees any row all
+    consumers are past, so a tensor never holds more than its allocation.
+    Driven step-by-step by the trace simulator (:mod:`repro.sim`), which
+    records ``resident_bytes`` per step and ``peak_bytes`` per subgraph;
+    the peak is by construction bounded by the analytical footprint
+    (:func:`subgraph_footprint`), and the cross-validation tests pin that.
+    """
+
+    caps_rows: Dict[int, int]          # region allocation x, in rows
+    line_bytes: Dict[int, int]
+    filled: Dict[int, int] = field(default_factory=dict)
+    peak_bytes: int = 0
+
+    @classmethod
+    def from_schedule(cls, g: Graph,
+                      sched: SubgraphSchedule) -> "OccupancyTracker":
+        return cls(
+            caps_rows={t: ts.x for t, ts in sched.tensors.items()},
+            line_bytes={t: g.nodes[t].line_bytes for t in sched.tensors},
+        )
+
+    def advance(self, produced: Mapping[int, int]) -> int:
+        """Account ``produced`` rows per tensor; returns bytes now resident."""
+        for t, rows in produced.items():
+            self.filled[t] = self.filled.get(t, 0) + rows
+        occ = self.resident_bytes()
+        self.peak_bytes = max(self.peak_bytes, occ)
+        return occ
+
+    def resident_bytes(self) -> int:
+        return sum(
+            min(rows, self.caps_rows.get(t, rows)) * self.line_bytes.get(t, 0)
+            for t, rows in self.filled.items()
+        )
+
+
 def build_region_table(
     g: Graph,
     nodes: Set[int],
     capacity_bytes: int,
     max_regions: int = 64,
     out_tile: int = 1,
+    schedule: Optional[SubgraphSchedule] = None,
 ) -> RegionTable:
-    """Compile-time layout: allocate MAIN (+SIDE) regions for every tensor."""
-    sched = derive_schedule(g, nodes, out_tile=out_tile)
+    """Compile-time layout: allocate MAIN (+SIDE) regions for every tensor.
+
+    ``schedule`` reuses an already-derived schedule (as
+    :func:`subgraph_footprint` does) instead of re-deriving it.
+    """
+    sched = schedule or derive_schedule(g, nodes, out_tile=out_tile)
     table = RegionTable(capacity_bytes, max_regions)
     for t in sorted(sched.tensors):
         ts = sched.tensors[t]

@@ -1,0 +1,284 @@
+"""The time-stepped plan executor: programs -> a :class:`TrafficTrace`.
+
+Executes a lowered plan (:mod:`repro.sim.lower`) on a single timeline:
+
+* a **prologue** step loads the first subgraph's resident weights,
+* each subgraph runs its elementary operations in schedule order; while it
+  computes, the *next* subgraph's first weight load streams in underneath
+  (the paper's double-buffered weight prefetch, Fig. 3),
+* single-layer block sweeps re-stream their weights at block boundaries.
+
+Time base: each subgraph's steps are scaled so their durations sum to the
+analytical subgraph latency ``max(compute, IO)`` — the simulator is a
+lowering of the cost model, not a second opinion on it, which is what
+makes exact analytical<->simulated cross-validation possible (total DRAM
+bytes match the kernel's EMA byte-for-byte, total cycles match
+``PlanCost.latency_cycles`` plus the prologue).  Within a subgraph, step
+durations are proportional to each step's own ``max(compute, IO)``, so
+bursts (block reloads, ramp-up loads) are visible in the profile.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.cost import AcceleratorConfig, CostKernel, PlanCost
+from repro.core.graph import Graph
+
+from .bandwidth import DEFAULT_PERCENTILES, BandwidthProfile, \
+    profile_from_steps
+from .lower import _even_split, lower_plan
+
+TRACE_FORMAT = "cocco-trace"
+TRACE_FORMAT_VERSION = 1
+
+PROLOGUE = -1   # TraceStep.subgraph index of the initial weight load
+
+
+@dataclass(frozen=True)
+class TraceStep:
+    """One timeline step: traffic, duration, and buffer state."""
+
+    subgraph: int        # plan index; PROLOGUE (-1) for the initial load
+    step: int            # step index within the subgraph
+    t_cycles: float      # start time
+    cycles: float        # duration
+    act_in: int          # external activation bytes loaded
+    act_out: int         # activation bytes stored
+    w_in: int            # weight bytes loaded (prefetch + stream)
+    occ_act: int         # activation-buffer bytes resident at step end
+    occ_w: int           # weight-buffer bytes resident at step end
+    rows: int = 0
+    macs: int = 0
+
+    @property
+    def dram_in(self) -> int:
+        return self.act_in + self.w_in
+
+    @property
+    def dram_out(self) -> int:
+        return self.act_out
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.dram_in + self.dram_out
+
+
+@dataclass(frozen=True)
+class SubgraphTrafficSummary:
+    """Per-subgraph totals of a trace (the cross-validation unit)."""
+
+    index: int
+    nodes: Tuple[int, ...]
+    act_in: int
+    act_out: int
+    w_first: int
+    w_stream: int
+    stream_blocks: int
+    cycles: float
+    n_steps: int
+    peak_occ_act: int
+    peak_occ_w: int
+    footprint: int
+    region_count: Optional[int]
+    region_table_bytes: Optional[int]
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.act_in + self.act_out + self.w_first + self.w_stream
+
+
+@dataclass
+class TrafficTrace:
+    """The simulator's output: a timeline plus per-subgraph totals."""
+
+    graph_name: str
+    acc: AcceleratorConfig
+    groups: List[Tuple[int, ...]]
+    out_tile: int
+    steps: List[TraceStep]
+    subgraphs: List[SubgraphTrafficSummary]
+    plan: PlanCost = field(repr=False, default=None)  # analytical companion
+
+    # -- totals ------------------------------------------------------------
+    @property
+    def total_dram_in(self) -> int:
+        return sum(s.dram_in for s in self.steps)
+
+    @property
+    def total_dram_out(self) -> int:
+        return sum(s.dram_out for s in self.steps)
+
+    @property
+    def total_dram_bytes(self) -> int:
+        return self.total_dram_in + self.total_dram_out
+
+    @property
+    def total_cycles(self) -> float:
+        return sum(s.cycles for s in self.steps)
+
+    def bandwidth_profile(
+        self, percentiles: Sequence[float] = DEFAULT_PERCENTILES,
+    ) -> BandwidthProfile:
+        # prologue steps are link-bound by construction, so they are
+        # excluded from the requirement statistics (peak/percentiles) but
+        # still count toward totals and sustained bandwidth — mirroring
+        # PlanCost.traffic_segments()/prologue_traffic()
+        return profile_from_steps(
+            ((s.dram_bytes, s.cycles) for s in self.steps
+             if s.subgraph >= 0),
+            self.acc.freq_hz, percentiles,
+            totals=(self.total_dram_bytes, self.total_cycles))
+
+    # -- serialization (the documented trace JSON schema) ------------------
+    def to_dict(self, meta: Optional[Dict[str, Any]] = None,
+                include_steps: bool = True) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "format": TRACE_FORMAT,
+            "version": TRACE_FORMAT_VERSION,
+            "graph": self.graph_name,
+            "acc": asdict(self.acc),
+            "out_tile": self.out_tile,
+            "groups": [list(gr) for gr in self.groups],
+            "totals": {
+                "dram_in": self.total_dram_in,
+                "dram_out": self.total_dram_out,
+                "dram_bytes": self.total_dram_bytes,
+                "cycles": self.total_cycles,
+            },
+            "profile": self.bandwidth_profile().to_dict(),
+            "subgraphs": [asdict(sg) for sg in self.subgraphs],
+        }
+        if include_steps:
+            d["steps"] = [asdict(s) for s in self.steps]
+        if meta:
+            d["meta"] = dict(meta)
+        return d
+
+    def to_json(self, meta: Optional[Dict[str, Any]] = None,
+                include_steps: bool = True,
+                indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(meta=meta,
+                                       include_steps=include_steps),
+                          indent=indent, sort_keys=True)
+
+
+def _coalesce(steps: List[TraceStep], limit: int) -> List[TraceStep]:
+    """Merge a subgraph's steps down to <= ``limit`` buckets (totals are
+    preserved exactly; occupancy takes the bucket's last value)."""
+    n = len(steps)
+    if n <= limit:
+        return steps
+    out: List[TraceStep] = []
+    start = 0
+    for b in range(limit):
+        end = ((b + 1) * n) // limit
+        chunk = steps[start:end]
+        if not chunk:
+            continue
+        out.append(TraceStep(
+            subgraph=chunk[0].subgraph, step=b,
+            t_cycles=chunk[0].t_cycles,
+            cycles=sum(c.cycles for c in chunk),
+            act_in=sum(c.act_in for c in chunk),
+            act_out=sum(c.act_out for c in chunk),
+            w_in=sum(c.w_in for c in chunk),
+            occ_act=chunk[-1].occ_act, occ_w=chunk[-1].occ_w,
+            rows=sum(c.rows for c in chunk),
+            macs=sum(c.macs for c in chunk)))
+        start = end
+    return out
+
+
+def simulate_plan(
+    g: Graph,
+    groups: Sequence[Set[int]],
+    acc: AcceleratorConfig,
+    out_tile: int = 1,
+    steps_per_subgraph: Optional[int] = None,
+    kernel: Optional[CostKernel] = None,
+) -> TrafficTrace:
+    """Execute a partition plan on the simulated timeline.
+
+    ``groups`` is the plan in execution order (any infeasible subgraph is
+    a :class:`ValueError` — an infeasible plan has no timeline).
+    ``steps_per_subgraph`` coalesces each subgraph's row-granular steps
+    down to at most that many buckets; coalescing merges traffic and time,
+    so every total (and the cross-validation) is resolution-independent.
+    """
+    programs, plan = lower_plan(g, groups, acc, out_tile=out_tile,
+                                kernel=kernel)
+    freq = acc.freq_hz
+    bpc = acc.dram_bytes_per_cycle
+
+    steps: List[TraceStep] = []
+    summaries: List[SubgraphTrafficSummary] = []
+    t = 0.0
+
+    # prologue: the first subgraph's resident weights load before compute
+    first0 = programs[0].weight_first
+    if first0 > 0:
+        cyc = first0 / bpc
+        steps.append(TraceStep(subgraph=PROLOGUE, step=0, t_cycles=t,
+                               cycles=cyc, act_in=0, act_out=0, w_in=first0,
+                               occ_act=0, occ_w=first0))
+        t += cyc
+
+    for i, prog in enumerate(programs):
+        n = prog.n_steps
+        nxt_first = (programs[i + 1].weight_first
+                     if i + 1 < len(programs) else 0)
+        prefetch = _even_split(nxt_first, n)
+        # raw per-step demand: max(compute, IO); then scale so the subgraph
+        # occupies exactly its analytical latency on the timeline
+        raw: List[float] = []
+        for k, stp in enumerate(prog.steps):
+            io = stp.act_in + stp.act_out + stp.w_stream + prefetch[k]
+            raw.append(max(stp.macs / acc.macs_per_cycle, io / bpc))
+        lat = prog.cost.latency_cycles(acc)
+        raw_sum = sum(raw)
+        if raw_sum > 0:
+            durations = [r * lat / raw_sum for r in raw]
+        else:
+            # no per-step demand (e.g. a weight-only subgraph whose first
+            # load happened in the previous prefetch window): spread the
+            # analytical latency evenly so the timeline still spans it
+            durations = [lat / n] * n
+
+        own_w = prog.cost.weight_resident     # resident block of own weights
+        pre_cum = 0
+        sub_steps: List[TraceStep] = []
+        sub_t = t
+        for k, stp in enumerate(prog.steps):
+            pre_cum += prefetch[k]
+            cyc = durations[k]
+            sub_steps.append(TraceStep(
+                subgraph=i, step=k, t_cycles=sub_t, cycles=cyc,
+                act_in=stp.act_in, act_out=stp.act_out,
+                w_in=stp.w_stream + prefetch[k],
+                occ_act=stp.occ_act, occ_w=own_w + pre_cum,
+                rows=stp.rows, macs=stp.macs))
+            sub_t += cyc
+        if steps_per_subgraph is not None:
+            sub_steps = _coalesce(sub_steps, max(1, steps_per_subgraph))
+        steps.extend(sub_steps)
+        t += lat
+
+        summaries.append(SubgraphTrafficSummary(
+            index=i, nodes=prog.nodes,
+            act_in=prog.act_in_total, act_out=prog.act_out_total,
+            w_first=prog.weight_first, w_stream=prog.weight_stream,
+            stream_blocks=prog.stream_blocks,
+            cycles=lat, n_steps=len(sub_steps),
+            peak_occ_act=prog.peak_occ_act,
+            peak_occ_w=own_w + nxt_first,
+            footprint=prog.footprint,
+            region_count=prog.region_count,
+            region_table_bytes=prog.region_table_bytes))
+
+    return TrafficTrace(
+        graph_name=g.name, acc=acc,
+        groups=[tuple(sorted(s)) for s in groups],
+        out_tile=out_tile, steps=steps, subgraphs=summaries, plan=plan)

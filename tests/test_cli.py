@@ -156,6 +156,86 @@ def test_workloads_ls_cli(capsys):
     assert "unknown workload scheme" in capsys.readouterr().err
 
 
+def test_workloads_ls_json_is_machine_readable(capsys):
+    from repro.api import parse_workload
+
+    assert main(["workloads", "ls", "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert set(doc) == {"schemes", "workloads"}
+    names = {s["name"] for s in doc["schemes"]}
+    assert {"netlib", "tpu", "synthetic", "file"} <= names
+    for s in doc["schemes"]:
+        assert set(s) == {"name", "syntax", "description", "stable"}
+    assert doc["workloads"], "concrete URIs expected"
+    for w in doc["workloads"]:
+        assert set(w) == {"uri", "scheme", "description"}
+        assert "<" not in w["uri"] and ".." not in w["uri"]
+        parse_workload(w["uri"])                  # every entry resolves
+
+    # --scheme filters both sections
+    assert main(["workloads", "ls", "--json", "--scheme", "netlib"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert [s["name"] for s in doc["schemes"]] == ["netlib"]
+    assert all(w["scheme"] == "netlib" for w in doc["workloads"])
+
+
+def test_trace_cli_exports_deterministic_valid_json(tmp_path, capsys):
+    import sys
+
+    sys.path.insert(0, str(REPO_ROOT / "scripts"))
+    try:
+        from check_trace_schema import validate_trace_dict
+    finally:
+        sys.path.pop(0)
+
+    out_a, out_b = tmp_path / "a.json", tmp_path / "b.json"
+    base = ["trace", "synthetic:layered:16?seed=2", "--strategy", "greedy"]
+    assert main(base + ["--out", str(out_a)]) == 0
+    out = capsys.readouterr().out
+    assert "cross-validation OK" in out and "bandwidth: peak=" in out
+    assert main(base + ["--out", str(out_b)]) == 0
+    capsys.readouterr()
+    # byte-identical across runs for a fixed seed
+    assert out_a.read_text() == out_b.read_text()
+
+    doc = json.loads(out_a.read_text())
+    assert validate_trace_dict(doc) == []
+    assert doc["meta"]["validation"]["ok"] is True
+    tot = doc["totals"]
+    assert tot["dram_bytes"] == tot["dram_in"] + tot["dram_out"]
+    assert tot["dram_bytes"] == \
+        doc["meta"]["validation"]["total_analytical_bytes"]
+
+    # --steps-per-subgraph coalesces the timeline but preserves every total
+    out_c = tmp_path / "c.json"
+    assert main(base + ["--steps-per-subgraph", "2",
+                        "--out", str(out_c)]) == 0
+    capsys.readouterr()
+    coarse = json.loads(out_c.read_text())
+    assert validate_trace_dict(coarse) == []
+    assert coarse["totals"] == doc["totals"]
+    assert len(coarse["steps"]) < len(doc["steps"])
+
+
+def test_trace_cli_replays_archived_plan(tmp_path, capsys):
+    res_path = tmp_path / "res.json"
+    assert main(["explore", "--workload", "synthetic:diamond:10?seed=2",
+                 "--strategy", "greedy", "--out", str(res_path)]) == 0
+    capsys.readouterr()
+    assert main(["trace", "--plan", str(res_path)]) == 0
+    out = capsys.readouterr().out
+    assert "synthetic:diamond:10?seed=2[greedy]" in out
+    assert "cross-validation OK" in out
+
+    # a conflicting workload URI alongside --plan is rejected, not ignored
+    with pytest.raises(SystemExit, match="cannot be combined"):
+        main(["trace", "netlib:resnet50", "--plan", str(res_path)])
+    # ...and so is a positional URI that disagrees with --workload
+    with pytest.raises(SystemExit, match="conflicting workloads"):
+        main(["trace", "synthetic:chain:8?seed=1",
+              "--workload", "netlib:vgg16"])
+
+
 def test_explore_accepts_workload_uris(tmp_path, capsys):
     out_path = tmp_path / "res.json"
     rc = main(["explore", "--workload", "synthetic:layered:12?seed=1",

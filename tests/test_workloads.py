@@ -31,7 +31,7 @@ from repro.core.partition import is_valid, partition_of, random_partition, split
 
 KB = 1 << 10
 
-SYNTH_KINDS = ("layered", "branchy", "diamond", "chain")
+SYNTH_KINDS = ("layered", "branchy", "diamond", "chain", "pyramid")
 
 
 def greedy_spec(uri, **kw):
@@ -168,6 +168,22 @@ def test_synthetic_deterministic_and_seed_sensitive(kind):
     assert a.n == 16
     other = build_workload(f"synthetic:{kind}:16?seed=5")
     assert graph_fingerprint(a) != graph_fingerprint(other)
+
+
+def test_pyramid_has_nonuniform_rows_and_multi_input_merges():
+    g = build_workload("synthetic:pyramid:24?seed=3")
+    # rows halve level by level -> several distinct row counts
+    assert len({v.out_len for v in g.nodes}) > 2
+    merges = [v for v in range(g.n) if len(g.in_edges(v)) >= 2]
+    assert merges
+    # at least one merge mixes producers of *different* row counts
+    # (a skip edge from an earlier pyramid level)
+    assert any(len({g.nodes[e.src].out_len for e in g.in_edges(v)}) > 1
+               for v in merges)
+    # every window stays inside its producer: F + (out_len-1)*s <= src rows
+    for e in g.edges:
+        need = e.F + (g.nodes[e.dst].out_len - 1) * e.s
+        assert need <= g.nodes[e.src].out_len, (e, need)
 
 
 def test_synthetic_errors():
