@@ -1,0 +1,109 @@
+"""Plan-server latency: cold search vs store hit vs zoo hit vs dedup join.
+
+The serving claim is quantitative — a repeated request must be answered
+from the store/zoo tiers orders of magnitude faster than the search that
+produced it, and N concurrent identical requests must cost one search.
+This bench measures exactly that, in-process (no HTTP, so the numbers are
+the service's own overhead, not socket noise):
+
+* ``serve.cold.<w>``   — first request: full search through the pool
+  (``searches=1`` derived).
+* ``serve.store_hit.<w>`` — identical request again, mean per-call over
+  repeats (derived: speedup vs cold).
+* ``serve.zoo_hit.<w>``   — same spec served from a read-only zoo mount.
+* ``serve.dedup.<w>``     — N threads hammer one *cold* spec; derived
+  reports searches (must be 1) and joins (must be N-1).
+
+Emits ``name,us_per_call,derived`` CSV like every other bench.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.api import ExploreSpec, ResultStore
+from repro.core.ga import HWSpace, Objective
+from repro.serve.plans import PlanService
+
+from .common import Timer, emit
+
+WORKLOADS = [
+    ("layered24", "synthetic:layered:24?seed=7"),
+    ("gemma3", "tpu:gemma3-4b:0?tokens=2048"),
+]
+
+HIT_REPEATS = 50
+DEDUP_FANOUT = 8
+
+
+def _spec(uri: str, seed: int = 0) -> ExploreSpec:
+    return ExploreSpec(workload=uri, strategy="greedy",
+                       objective=Objective(metric="ema", alpha=None),
+                       hw=HWSpace(mode="fixed"),
+                       sample_budget=2_000, seed=seed)
+
+
+def main() -> None:
+    for name, uri in WORKLOADS:
+        root = Path(tempfile.mkdtemp(prefix=f"bench-serve-{name}-"))
+        svc = PlanService(ResultStore(root / "store"), workers=2)
+        try:
+            spec = _spec(uri)
+            t = Timer()
+            svc.plan(spec)
+            cold_us = t.us
+            emit(f"serve.cold.{name}", cold_us,
+                 f"searches={svc.searches}")
+
+            t = Timer()
+            for _ in range(HIT_REPEATS):
+                svc.plan(spec)
+            hit_us = t.us / HIT_REPEATS
+            emit(f"serve.store_hit.{name}", hit_us,
+                 f"speedup={cold_us / max(hit_us, 1e-9):.0f}x")
+
+            # zoo tier: mount the store we just filled as a read-only zoo
+            zoo_svc = PlanService(ResultStore(root / "fresh"),
+                                  zoo=ResultStore(root / "store",
+                                                  read_only=True))
+            try:
+                zoo_svc.plan(spec)          # warm the mount's first stat
+                t = Timer()
+                for _ in range(HIT_REPEATS):
+                    zoo_svc.plan(spec)
+                emit(f"serve.zoo_hit.{name}", t.us / HIT_REPEATS,
+                     f"zoo_hits={zoo_svc.zoo_hits}")
+            finally:
+                zoo_svc.close()
+
+            # dedup: N concurrent requests for one cold spec, one search
+            fresh = _spec(uri, seed=1)
+            barrier = threading.Barrier(DEDUP_FANOUT)
+
+            def hammer():
+                barrier.wait()
+                svc.plan(fresh)
+
+            threads = [threading.Thread(target=hammer)
+                       for _ in range(DEDUP_FANOUT)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            us = (time.perf_counter() - t0) * 1e6 / DEDUP_FANOUT
+            emit(f"serve.dedup.{name}", us,
+                 f"fanout={DEDUP_FANOUT} searches={svc.searches - 1} "
+                 f"joins={svc.dedup_joins}")
+        finally:
+            svc.close()
+
+
+if __name__ == "__main__":
+    from .common import configure
+
+    configure(store_dir=None)
+    main()

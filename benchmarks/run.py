@@ -28,6 +28,7 @@ from . import (
     bench_fig12_13_14,
     bench_kernels,
     bench_roofline,
+    bench_serve,
     bench_table3,
     bench_tables12,
     bench_trace,
@@ -42,6 +43,7 @@ BENCHES = {
     "table3": bench_table3.main,
     "workloads": bench_workloads.main,
     "trace": bench_trace.main,
+    "serve": bench_serve.main,
     "kernels": bench_kernels.main,
     "roofline": bench_roofline.main,
 }

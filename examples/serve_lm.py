@@ -1,21 +1,50 @@
 """Batched serving example: generate from three archs (dense GQA, SSM,
-enc-dec) through the same engine API.
+enc-dec) through the same engine API — with the memory-capacity plan for
+each arch requested from an in-process plan service first (the Cocco side
+of serving: plan the block's buffering before running the model; repeat
+runs replay the plan from the store in milliseconds).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
 
+import tempfile
+
 import jax
 import numpy as np
 
+from repro.api import ExploreSpec, ResultStore
 from repro.configs import get_config
+from repro.core.ga import HWSpace, Objective
 from repro.models import lm_init, param_values
-from repro.serve import EncDecEngine, Request, ServeConfig, ServeEngine
+from repro.serve import (
+    EncDecEngine,
+    PlanService,
+    Request,
+    ServeConfig,
+    ServeEngine,
+)
+
+def plan_block(planner: PlanService, arch: str) -> None:
+    """Ask the plan service for the arch's layer-0 execution plan."""
+    spec = ExploreSpec(workload=f"tpu:{arch}:0?tokens=512",
+                       strategy="greedy",
+                       objective=Objective(metric="ema", alpha=None),
+                       hw=HWSpace(mode="fixed"),
+                       sample_budget=500, seed=0)
+    resp = planner.plan(spec)
+    print(f"  plan: {resp.result.summary()}")
+    print(f"  plan: served_from={resp.served_from} "
+          f"in {resp.latency_ms:.1f}ms")
 
 
 def main():
+    planner = PlanService(ResultStore(
+        tempfile.mkdtemp(prefix="serve-lm-plans-")))
     rng = np.random.default_rng(0)
     for arch in ("tinyllama-1.1b", "xlstm-350m"):
         cfg = get_config(arch, smoke=True)
+        print(f"{arch}: planning block buffering")
+        plan_block(planner, arch)
         values = param_values(lm_init(jax.random.PRNGKey(0), cfg))
         eng = ServeEngine(cfg, values, ServeConfig(max_batch=4, max_len=64))
         reqs = [Request(rid=i,
@@ -27,6 +56,8 @@ def main():
             print(f"  req {rid} -> {outs[rid]}")
 
     cfg = get_config("whisper-base", smoke=True)
+    print("whisper-base: planning block buffering")
+    plan_block(planner, "whisper-base")
     values = param_values(lm_init(jax.random.PRNGKey(0), cfg))
     eng = EncDecEngine(cfg, values, ServeConfig(max_batch=2, max_len=32))
     frames = rng.normal(size=(2, 12, cfg.d_model)).astype(np.float32)
@@ -34,6 +65,7 @@ def main():
     print("whisper-base:")
     for i, o in enumerate(outs):
         print(f"  audio {i} -> {o}")
+    planner.close()
 
 
 if __name__ == "__main__":

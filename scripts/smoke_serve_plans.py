@@ -1,0 +1,143 @@
+#!/usr/bin/env python
+"""CI smoke for `python -m repro serve-plans` (stdlib only).
+
+Boots a real server subprocess on an OS-assigned port, then asserts the
+acceptance behaviour of the plan service end to end over HTTP:
+
+1. a cold request searches (``served_from == "search"``);
+2. the identical request again replays from the store in bounded time
+   (``served_from == "store"``, default bound 100 ms);
+3. N concurrent *misses* of one new spec perform exactly one search —
+   ``/stats`` reports ``dedup_joins == N-1`` and ``searches`` grew by 1;
+4. every response carries identical result bytes for identical specs, and
+   ``/stats`` matches the request history (requests/hits/misses add up).
+
+Exit 0 on success; nonzero with a diagnostic on any violation.  Usage::
+
+    python scripts/smoke_serve_plans.py [--hit-budget-ms 100]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+sys.path.insert(0, str(SRC))
+
+from repro.api import ExploreSpec  # noqa: E402
+from repro.core import HWSpace, Objective  # noqa: E402
+from repro.serve.plans import fetch_stats, request_plan  # noqa: E402
+
+
+def spec_for(seed: int) -> ExploreSpec:
+    return ExploreSpec(workload="synthetic:layered:10?seed=4",
+                       strategy="greedy",
+                       objective=Objective(metric="ema", alpha=None),
+                       hw=HWSpace(mode="fixed"),
+                       sample_budget=200, seed=seed)
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def wait_for_url(port_file: Path, proc: subprocess.Popen,
+                 timeout: float = 30.0) -> str:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            fail(f"server exited early with rc={proc.returncode}")
+        if port_file.exists():
+            url = port_file.read_text().strip()
+            if url:
+                return url
+        time.sleep(0.05)
+    fail("server did not write --port-file in time")
+    raise AssertionError  # unreachable
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hit-budget-ms", type=float, default=100.0,
+                    help="max server-side latency for a store hit")
+    ap.add_argument("--dedup-fanout", type=int, default=6)
+    args = ap.parse_args()
+
+    tmp = Path(tempfile.mkdtemp(prefix="serve-plans-smoke-"))
+    port_file = tmp / "url"
+    env = dict(os.environ, PYTHONPATH=str(SRC))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro", "serve-plans",
+         "--store-dir", str(tmp / "store"), "--port", "0",
+         "--port-file", str(port_file), "--workers", "2"],
+        env=env, cwd=REPO,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    try:
+        url = wait_for_url(port_file, proc)
+        print(f"server up at {url}")
+
+        # 1+2: cold search, then a store hit answered within budget
+        cold = request_plan(url, spec_for(seed=0))
+        if cold["served_from"] != "search":
+            fail(f"cold request served from {cold['served_from']!r}")
+        warm = request_plan(url, spec_for(seed=0))
+        if warm["served_from"] != "store":
+            fail(f"repeat request served from {warm['served_from']!r}")
+        if warm["result"] != cold["result"]:
+            fail("store replay is not bitwise-identical to the search")
+        if warm["latency_ms"] > args.hit_budget_ms:
+            fail(f"store hit took {warm['latency_ms']:.1f}ms "
+                 f"(> {args.hit_budget_ms:.0f}ms budget)")
+        print(f"store hit in {warm['latency_ms']:.1f}ms "
+              f"(budget {args.hit_budget_ms:.0f}ms)")
+
+        # 3: concurrent identical misses dedup to one search
+        n = args.dedup_fanout
+        fresh = spec_for(seed=1)
+        with ThreadPoolExecutor(max_workers=n) as pool:
+            docs = list(pool.map(lambda _: request_plan(url, fresh),
+                                 range(n)))
+        if len({json.dumps(d["result"], sort_keys=True)
+                for d in docs}) != 1:
+            fail("concurrent duplicates returned different results")
+        deduped = sum(d["deduped"] for d in docs)
+        stats = fetch_stats(url)["server"]
+        if stats["searches"] != 2:
+            fail(f"expected exactly 2 searches total (cold + fanout), "
+                 f"/stats says {stats['searches']}")
+        if stats["dedup_joins"] != n - 1 or deduped != n - 1:
+            fail(f"expected {n - 1} dedup joins, /stats says "
+                 f"{stats['dedup_joins']} (responses flagged {deduped})")
+        print(f"dedup fanout: {n} concurrent requests -> 1 search, "
+              f"{stats['dedup_joins']} joins")
+
+        # 4: the ledger adds up
+        if stats["requests"] != 2 + n:
+            fail(f"/stats requests={stats['requests']}, expected {2 + n}")
+        if stats["store_hits"] < 1 or stats["errors"] != 0:
+            fail(f"unexpected /stats counters: {stats}")
+        print("smoke OK:", json.dumps({k: stats[k] for k in
+              ("requests", "searches", "store_hits", "dedup_joins")}))
+        return 0
+    finally:
+        proc.terminate()
+        try:
+            out = proc.communicate(timeout=10)[0]
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            out = proc.communicate()[0]
+        if out:
+            print("--- server log ---")
+            print(out, end="")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

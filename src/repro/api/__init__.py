@@ -41,8 +41,15 @@ from .spec import (
     TwoStepOptions,
 )
 from .result import ExploreResult
-from .store import ResultStore, StoreEntry, graph_fingerprint, spec_key
-from .strategies import compare, plan_tpu, run
+from .store import (
+    ResultStore,
+    StoreEntry,
+    StoreLockTimeout,
+    StoreReadOnly,
+    graph_fingerprint,
+    spec_key,
+)
+from .strategies import active_store, compare, plan_tpu, run
 from .workloads import (
     WorkloadScheme,
     build_workload,
@@ -62,10 +69,13 @@ __all__ = [
     "ResultStore",
     "SAOptions",
     "StoreEntry",
+    "StoreLockTimeout",
+    "StoreReadOnly",
     "Strategy",
     "StrategyEntry",
     "TwoStepOptions",
     "WorkloadScheme",
+    "active_store",
     "build_workload",
     "compare",
     "get_strategy",

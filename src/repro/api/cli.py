@@ -14,9 +14,18 @@ Subcommands:
 * ``workloads`` — ``ls`` every resolvable workload URI (scheme registry:
                   ``netlib:`` / ``tpu:`` / ``synthetic:`` / ``file:``);
                   ``--json`` emits a machine-readable listing for tooling.
-* ``store``     — ``ls`` the spec-addressed result store, or ``gc`` it down
-                  to a byte cap (LRU by artifact mtime).
+* ``store``     — ``ls`` the spec-addressed result store (``--json`` for a
+                  machine-readable listing), or ``gc`` it down to a byte cap
+                  (LRU by artifact mtime).
 * ``plan-tpu``  — Cocco as the TPU execution planner for a model config.
+* ``serve-plans`` — long-running HTTP plan server over a result store
+                  (``POST /plan`` with an ExploreSpec JSON body; hits replay
+                  in milliseconds, misses search once with in-flight
+                  deduplication).  ``--stats`` / ``--request`` are the
+                  client modes.  See ``docs/serving.md``.
+* ``zoo``       — ``build`` the precomputed plan zoo (resumable grid sweep
+                  into a store directory), ``ls`` grid coverage, ``verify``
+                  replay integrity of every artifact.
 
 ``--workload`` takes a URI (a bare name is ``netlib:<name>``): e.g.
 ``netlib:resnet50``, ``tpu:gemma3-4b:0?tokens=4096``,
@@ -44,6 +53,11 @@ Examples::
         --out runs/trace.json
     python -m repro workloads ls --json
     python -m repro plan-tpu --arch glm4-9b --samples 2000
+    python -m repro zoo build --zoo-dir runs/zoo --budget 2000
+    python -m repro serve-plans --store-dir runs/store --zoo-dir runs/zoo
+    python -m repro serve-plans --stats --url http://127.0.0.1:8787
+    python -m repro explore --workload resnet50 --strategy ga \
+        --budget 20000 --store-dir runs/store --seed-from-store 1a2b3c4d
 """
 
 from __future__ import annotations
@@ -52,6 +66,7 @@ import argparse
 import json
 import os
 import sys
+from dataclasses import replace
 from typing import Any, Dict, List, Optional
 
 from repro.core.cost import METRICS
@@ -77,10 +92,38 @@ def _parse_opt_overrides(pairs: List[str]) -> Dict[str, Any]:
     return out
 
 
+def _apply_seed_from_store(args: argparse.Namespace,
+                           spec: ExploreSpec) -> ExploreSpec:
+    """Resolve ``--seed-from-store KEY`` prefixes against the store and
+    inject them as ``options.seed_from_keys`` (GA warm-starting from
+    archived reduced-budget results)."""
+    prefixes = getattr(args, "seed_from_store", None) or []
+    if not prefixes:
+        return spec
+    if args.spec:
+        raise SystemExit(
+            "--seed-from-store cannot be combined with --spec; set "
+            "options.seed_from_keys inside the spec file instead")
+    if spec.options is None or not hasattr(spec.options, "seed_from_keys"):
+        raise SystemExit(
+            "--seed-from-store needs a strategy that supports "
+            f"seed_from_keys (ga), not {spec.strategy!r}")
+    store = _store_from_args(args)
+    if store is None:
+        raise SystemExit(
+            "--seed-from-store resolves keys against a store: pass "
+            "--store-dir (or set $REPRO_STORE_DIR), without --no-store")
+    keys = tuple(k if len(k) == 64 else store.resolve_key(k)
+                 for k in prefixes)
+    return replace(spec, options=replace(spec.options,
+                                         seed_from_keys=keys))
+
+
 def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
     if args.spec:
         with open(args.spec) as f:
-            return ExploreSpec.from_json(f.read())
+            return _apply_seed_from_store(
+                args, ExploreSpec.from_json(f.read()))
     if not args.workload:
         raise SystemExit("either --spec or --workload is required")
     opts_cls = options_class_for(args.strategy)
@@ -89,7 +132,7 @@ def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
             f"unknown strategy {args.strategy!r}; "
             f"registered: {', '.join(list_strategies())}")
     options = opts_cls(**_parse_opt_overrides(args.opt))
-    return ExploreSpec(
+    spec = ExploreSpec(
         workload=args.workload,
         strategy=args.strategy,
         objective=Objective(metric=args.metric, alpha=args.alpha),
@@ -99,6 +142,7 @@ def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
         out_tile=args.out_tile,
         options=options,
     )
+    return _apply_seed_from_store(args, spec)
 
 
 def _write_file(path: str, payload: str) -> None:
@@ -207,6 +251,24 @@ def cmd_store_ls(args: argparse.Namespace) -> int:
 
     store = _store_for_maintenance(args)
     entries = store.entries()
+    total = sum(e.size for e in entries)
+    if args.json:
+        # machine-readable contract for tooling: full keys, raw sizes and
+        # mtimes, LRU order (oldest first) — same rows `store gc` walks
+        doc = {
+            "root": str(store.root),
+            "count": len(entries),
+            "total_bytes": total,
+            "entries": [{
+                "key": e.key,
+                "workload": e.workload or None,
+                "strategy": e.strategy or None,
+                "size": e.size,
+                "mtime": e.mtime,
+            } for e in entries],
+        }
+        print(json.dumps(doc, indent=2, sort_keys=True))
+        return 0
     rows = [{
         "key": e.key[:16],
         "workload": e.workload or "?",
@@ -217,7 +279,6 @@ def cmd_store_ls(args: argparse.Namespace) -> int:
     } for e in entries]
     if rows:
         _print_table(rows)
-    total = sum(e.size for e in entries)
     print(f"\n{len(entries)} entries, {_fmt_bytes(total)} in {store.root}")
     return 0
 
@@ -340,6 +401,153 @@ def cmd_plan_tpu(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_serve_plans(args: argparse.Namespace) -> int:
+    from repro.serve.plans import (
+        PlanServer,
+        PlanService,
+        fetch_stats,
+        request_plan,
+    )
+
+    if args.stats or args.request:
+        # client modes: talk to an already-running server and exit
+        url = args.url or f"http://{args.host}:{args.port}"
+        if args.stats:
+            print(json.dumps(fetch_stats(url), indent=2, sort_keys=True))
+            return 0
+        with open(args.request) as f:
+            spec = ExploreSpec.from_json(f.read())
+        doc = request_plan(url, spec, timeout=args.timeout)
+        res = ExploreResult.from_dict(doc["result"])
+        print(res.summary())
+        print(f"  served_from={doc['served_from']} deduped={doc['deduped']} "
+              f"latency={doc['latency_ms']:.1f}ms key={doc['key'][:16]}")
+        return 0
+    store_dir = args.store_dir or os.environ.get("REPRO_STORE_DIR")
+    if not store_dir:
+        raise SystemExit(
+            "serve-plans needs --store-dir (or $REPRO_STORE_DIR)")
+    store = ResultStore(store_dir)
+    zoo_dir = args.zoo_dir or os.environ.get("REPRO_ZOO_DIR")
+    zoo = ResultStore(zoo_dir, read_only=True) if zoo_dir else None
+    service = PlanService(store, zoo=zoo, workers=args.workers,
+                          eval_backend=args.eval_backend,
+                          eval_jobs=args.eval_jobs)
+    server = PlanServer((args.host, args.port), service,
+                        quiet=not args.verbose)
+    if args.port_file:
+        _write_file(args.port_file, server.url + "\n")
+    zoo_note = f", zoo={zoo.root} ({len(zoo)} plans)" if zoo else ""
+    print(f"serve-plans: listening on {server.url} "
+          f"(store={store.root}{zoo_note}, workers={service.workers})",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.close()
+    return 0
+
+
+def _zoo_dir_from_args(args: argparse.Namespace) -> str:
+    return args.zoo_dir or os.environ.get("REPRO_ZOO_DIR") or "runs/zoo"
+
+
+def _parse_objectives(raw: str) -> List[Any]:
+    """``"ema,energy:0.002"`` -> ``[("ema", None), ("energy", 0.002)]``."""
+    out = []
+    for item in raw.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if ":" in item:
+            metric, alpha = item.split(":", 1)
+            out.append((metric, float(alpha)))
+        else:
+            out.append((item, None))
+    return out
+
+
+def _zoo_grid(args: argparse.Namespace) -> List[ExploreSpec]:
+    from repro.serve.zoo import zoo_specs
+
+    workloads = ([w.strip() for w in args.workloads.split(",") if w.strip()]
+                 if args.workloads else None)
+    strategies = [s.strip() for s in args.strategies.split(",") if s.strip()]
+    specs = zoo_specs(workloads=workloads, strategies=strategies,
+                      objectives=_parse_objectives(args.objectives),
+                      budget=args.budget, seed=args.seed)
+    if args.limit is not None:
+        specs = specs[:args.limit]
+    return specs
+
+
+def _objective_label(spec: ExploreSpec) -> str:
+    return spec.objective.metric + (
+        "" if spec.objective.alpha is None else f":{spec.objective.alpha:g}")
+
+
+def cmd_zoo_build(args: argparse.Namespace) -> int:
+    from repro.api.store import spec_key
+    from repro.serve.zoo import build_zoo
+
+    specs = _zoo_grid(args)
+    if args.dry_run:
+        _print_table([{
+            "workload": s.workload,
+            "strategy": s.strategy,
+            "objective": _objective_label(s),
+            "budget": str(s.sample_budget),
+            "key": spec_key(s)[:16],
+        } for s in specs])
+        print(f"\n{len(specs)} zoo specs (dry run; nothing built)")
+        return 0
+    store = ResultStore(_zoo_dir_from_args(args))
+    report = build_zoo(store, specs, progress=print)
+    print(f"zoo[{store.root}]: {report.built} built, {report.replayed} "
+          f"already archived, {report.failed} failed "
+          f"({len(store)} artifacts, {_fmt_bytes(store.total_bytes())})")
+    return 1 if report.failed else 0
+
+
+def cmd_zoo_ls(args: argparse.Namespace) -> int:
+    from repro.serve.zoo import zoo_coverage
+
+    zoo_dir = _zoo_dir_from_args(args)
+    store = (ResultStore(zoo_dir, read_only=True)
+             if os.path.isdir(zoo_dir) else None)
+    rows = zoo_coverage(store, _zoo_grid(args))
+    archived = sum(r["status"] == "archived" for r in rows)
+    if args.json:
+        print(json.dumps({
+            "zoo_dir": zoo_dir,
+            "archived": archived,
+            "missing": len(rows) - archived,
+            "rows": rows,
+        }, indent=2, sort_keys=True))
+        return 0
+    if rows:
+        _print_table(rows)
+    print(f"\nzoo[{zoo_dir}]: {archived}/{len(rows)} grid points archived")
+    return 0
+
+
+def cmd_zoo_verify(args: argparse.Namespace) -> int:
+    from repro.serve.zoo import verify_zoo
+
+    store = ResultStore(_zoo_dir_from_args(args), read_only=True)
+    problems = verify_zoo(store, rebuild_graphs=not args.no_rebuild)
+    if problems:
+        for problem in problems:
+            print(f"FAIL {problem}")
+        print(f"zoo[{store.root}]: {len(problems)} problems in "
+              f"{len(store)} artifacts")
+        return 1
+    print(f"zoo[{store.root}]: {len(store)} artifacts verified clean")
+    return 0
+
+
 def _add_spec_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--spec", help="load an ExploreSpec JSON file "
                                   "(overrides the flags below)")
@@ -371,6 +579,12 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--no-store", action="store_true",
                    help="ignore --store-dir/$REPRO_STORE_DIR and always "
                         "search from scratch")
+    p.add_argument("--seed-from-store", action="append", default=[],
+                   metavar="KEY",
+                   help="seed the GA population from this archived result's "
+                        "groups (full store key or a unique >= 8-char "
+                        "prefix; repeatable; needs a store and strategy ga "
+                        "— warm-start FULL-budget sweeps from reduced runs)")
     p.add_argument("--eval-jobs", type=int, default=1,
                    help="evaluation-engine workers for batched cost queries "
                         "within one strategy (results are identical to "
@@ -449,6 +663,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     psl = store_sub.add_parser("ls", help="list store entries (LRU first)")
     psl.add_argument("--store-dir", default=None,
                      help="store directory (default: $REPRO_STORE_DIR)")
+    psl.add_argument("--json", action="store_true",
+                     help="machine-readable output: {root, count, "
+                          "total_bytes, entries:[{key, workload, strategy, "
+                          "size, mtime}]} with full keys (for tooling)")
     psl.set_defaults(fn=cmd_store_ls)
     psg = store_sub.add_parser(
         "gc", help="evict least-recently-written entries down to a size cap")
@@ -467,6 +685,90 @@ def main(argv: Optional[List[str]] = None) -> int:
     pt.add_argument("--samples", type=int, default=2_000)
     pt.add_argument("--seed", type=int, default=0)
     pt.set_defaults(fn=cmd_plan_tpu)
+
+    from repro.serve.zoo import DEFAULT_BUDGET
+
+    psp = sub.add_parser(
+        "serve-plans",
+        help="HTTP plan server over a result store (docs/serving.md)")
+    psp.add_argument("--host", default="127.0.0.1")
+    psp.add_argument("--port", type=int, default=8787,
+                     help="bind port (0 lets the OS pick; see --port-file)")
+    psp.add_argument("--store-dir", default=None,
+                     help="read-write result store every search publishes "
+                          "to (default: $REPRO_STORE_DIR)")
+    psp.add_argument("--zoo-dir", default=None,
+                     help="mount a prebuilt plan zoo as a read-only "
+                          "read-through tier (default: $REPRO_ZOO_DIR)")
+    psp.add_argument("--workers", type=int, default=2,
+                     help="search worker threads (hits never queue behind "
+                          "them)")
+    psp.add_argument("--eval-jobs", type=int, default=1,
+                     help="evaluation-engine workers per search")
+    psp.add_argument("--eval-backend", default=None,
+                     choices=["serial", "process", "vector"])
+    psp.add_argument("--port-file", metavar="PATH",
+                     help="write the bound URL here once listening "
+                          "(CI/scripts; pairs with --port 0)")
+    psp.add_argument("--verbose", action="store_true",
+                     help="log each HTTP request")
+    psp.add_argument("--stats", action="store_true",
+                     help="client mode: print a running server's /stats "
+                          "JSON and exit")
+    psp.add_argument("--request", metavar="SPEC.json",
+                     help="client mode: POST this ExploreSpec file to a "
+                          "running server, print the plan summary")
+    psp.add_argument("--url", default=None,
+                     help="server URL for --stats/--request "
+                          "(default: http://HOST:PORT)")
+    psp.add_argument("--timeout", type=float, default=600.0,
+                     help="client-mode request timeout in seconds")
+    psp.set_defaults(fn=cmd_serve_plans)
+
+    def _add_zoo_grid_args(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--zoo-dir", default=None,
+                       help="zoo directory (default: $REPRO_ZOO_DIR, "
+                            "else runs/zoo)")
+        p.add_argument("--workloads", default=None,
+                       help="comma-separated workload URIs (default: every "
+                            "netlib: model + the curated tpu: blocks)")
+        p.add_argument("--strategies", default="greedy,ga",
+                       help="comma-separated strategies")
+        p.add_argument("--objectives", default="ema,energy:0.002",
+                       help="comma-separated metric[:alpha] objectives")
+        p.add_argument("--budget", type=int, default=DEFAULT_BUDGET,
+                       help="sample budget per grid point")
+        p.add_argument("--seed", type=int, default=0)
+        p.add_argument("--limit", type=int, default=None, metavar="N",
+                       help="only the first N grid points (smoke/CI)")
+
+    pz = sub.add_parser(
+        "zoo", help="build / inspect / verify the precomputed plan zoo")
+    zsub = pz.add_subparsers(dest="zoo_cmd", required=True)
+    pzb = zsub.add_parser(
+        "build",
+        help="archive every grid point into the zoo store (resumable: "
+             "already-archived specs replay instead of re-searching)")
+    _add_zoo_grid_args(pzb)
+    pzb.add_argument("--dry-run", action="store_true",
+                     help="print the grid (workload/strategy/objective/key) "
+                          "without building anything")
+    pzb.set_defaults(fn=cmd_zoo_build)
+    pzl = zsub.add_parser("ls", help="grid coverage: archived vs missing")
+    _add_zoo_grid_args(pzl)
+    pzl.add_argument("--json", action="store_true",
+                     help="machine-readable coverage rows")
+    pzl.set_defaults(fn=cmd_zoo_ls)
+    pzv = zsub.add_parser(
+        "verify",
+        help="replay-integrity check of every artifact in the zoo")
+    pzv.add_argument("--zoo-dir", default=None,
+                     help="zoo directory (default: $REPRO_ZOO_DIR, "
+                          "else runs/zoo)")
+    pzv.add_argument("--no-rebuild", action="store_true",
+                     help="skip re-resolving workload URIs (faster; still "
+                          "checks parse/spec-hash/re-scored cost)")
+    pzv.set_defaults(fn=cmd_zoo_verify)
 
     args = ap.parse_args(argv)
     try:

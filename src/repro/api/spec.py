@@ -36,6 +36,12 @@ class GAOptions:
     # names of registered strategies whose result groups seed the initial
     # population (paper §4.3 benefit 4, "flexible initialization")
     seed_from: Tuple[str, ...] = ()
+    # store keys (64-hex, see `repro.api.store.spec_key`) of archived
+    # ExploreResults whose groups also seed the initial population — the
+    # warm-start path for FULL-budget sweeps from reduced-run artifacts
+    # (`--seed-from-store` on the CLI).  Requires a store at run time; the
+    # keys are part of the spec, so a warm-started run has its own address.
+    seed_from_keys: Tuple[str, ...] = ()
 
 
 @dataclass(frozen=True)

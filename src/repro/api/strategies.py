@@ -16,6 +16,7 @@ Fixed-hardware methods (``greedy``/``dp``/``enum``) evaluate at
 
 from __future__ import annotations
 
+import contextvars
 import math
 from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import replace
@@ -45,6 +46,21 @@ from .spec import (
 )
 from .store import ResultStore, graph_fingerprint, spec_key
 from .workloads import build_workload  # re-export: the one resolution path
+
+
+# The store of the innermost active run(), visible to strategies that launch
+# nested sub-searches (GAOptions.seed_from baselines, seed_from_keys lookups)
+# so those share — and populate — the same spec-addressed cache instead of
+# re-searching their seeds on every sweep point.  A contextvar keeps it
+# correct per-thread (the plan server runs searches on a worker pool).
+_ACTIVE_STORE: contextvars.ContextVar[Optional[ResultStore]] = \
+    contextvars.ContextVar("repro_active_store", default=None)
+
+
+def active_store() -> Optional[ResultStore]:
+    """The :class:`ResultStore` of the innermost in-flight :func:`run`,
+    or ``None``.  For strategies that issue nested sub-searches."""
+    return _ACTIVE_STORE.get()
 
 
 def _make_evaluator(g: Graph, out_tile: int, eval_backend: Optional[str],
@@ -117,10 +133,12 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             f"strategy {spec.strategy!r} expects options of type "
             f"{entry.options_cls.__name__}, got {type(options).__name__}"
         )
+    token = _ACTIVE_STORE.set(store if use_store else None)
     try:
         with ev.count_run() as touched:
             result = entry.fn(spec, options, g, ev, **runtime)
     finally:
+        _ACTIVE_STORE.reset(token)
         if created_ev:
             ev.close()  # release executor pools; the cache dies with ev
     result.evaluations = len(touched)
@@ -311,6 +329,39 @@ def _fixed_point(spec: ExploreSpec, groups: Sequence[Set[int]],
 # built-in strategies
 # ---------------------------------------------------------------------------
 
+def _store_seed_groups(opts: GAOptions, spec: ExploreSpec,
+                       g: Graph) -> List[List[Set[int]]]:
+    """Resolve ``opts.seed_from_keys`` against the active store: each key
+    names an archived result (any strategy/budget) whose groups warm-start
+    the population.  The archived partition must actually cover this graph,
+    or a key pointing at a different workload would silently poison the
+    initial population."""
+    if not opts.seed_from_keys:
+        return []
+    store = active_store()
+    if store is None:
+        raise ValueError(
+            "GAOptions.seed_from_keys needs a result store at run time "
+            "(pass store= / --store-dir); keys cannot resolve without one")
+    seeds: List[List[Set[int]]] = []
+    every_node = set(range(g.n))
+    for key in opts.seed_from_keys:
+        seeded = store.get_by_key(key)
+        if seeded is None:
+            raise ValueError(
+                f"seed_from_keys entry {key[:16]}... not found in "
+                f"store[{store.root}] (run the reduced spec first, or check "
+                f"`python -m repro store ls --json`)")
+        covered = set().union(*seeded.groups) if seeded.groups else set()
+        if covered != every_node:
+            raise ValueError(
+                f"seed_from_keys entry {key[:16]}... partitions workload "
+                f"{seeded.workload!r}, which does not cover "
+                f"{spec.workload!r} ({len(covered)} vs {g.n} nodes)")
+        seeds.append(seeded.groups)
+    return seeds
+
+
 @register_strategy("ga", GAOptions)
 def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
                  ev: CachedEvaluator, init_groups=None) -> ExploreResult:
@@ -319,10 +370,19 @@ def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
         if name == spec.strategy:
             raise ValueError(
                 f"seed_from cannot include the running strategy {name!r}")
+        # Baseline seed searches always run (so the outer result's
+        # `evaluations` stays independent of store warmth) but publish
+        # write-through into the active store: the sweep's reduced baseline
+        # specs become store hits for every later top-level run/compare.
         seeded = run(replace(spec, strategy=name, options=None),
                      graph=g, ev=ev)
+        store = active_store()
+        if (store is not None and seeded.spec is not None
+                and seeded.spec not in store):
+            store.put(seeded.spec, seeded)
         if seeded.groups:
             seeds.append(seeded.groups)
+    seeds.extend(_store_seed_groups(opts, spec, g))
     res = run_ga(
         g, spec.objective, spec.hw,
         sample_budget=spec.sample_budget,
@@ -336,7 +396,8 @@ def _strategy_ga(spec: ExploreSpec, opts: GAOptions, g: Graph,
         log_populations=opts.log_populations,
         ev=ev,
     )
-    return _from_search(spec, res, seeded_from=list(opts.seed_from))
+    return _from_search(spec, res, seeded_from=list(opts.seed_from),
+                        seeded_from_keys=list(opts.seed_from_keys))
 
 
 @register_strategy("greedy", GreedyOptions)

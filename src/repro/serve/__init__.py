@@ -1,3 +1,56 @@
-from .engine import EncDecEngine, Request, ServeConfig, ServeEngine
+"""Serving layer: the LM batch engine (jax) + the plan server (stdlib).
 
-__all__ = ["EncDecEngine", "Request", "ServeConfig", "ServeEngine"]
+``repro.serve.engine`` needs jax and the model zoo; the plan server
+(``plans``/``zoo``) is pure stdlib over ``repro.api``.  The engine names
+are lazy module attributes so that ``python -m repro serve-plans`` (and the
+plan-server tests) never pay — or depend on — the jax import.
+"""
+
+_ENGINE_EXPORTS = ("EncDecEngine", "Request", "ServeConfig", "ServeEngine")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from . import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+from .plans import (
+    PlanResponse,
+    PlanServer,
+    PlanService,
+    fetch_stats,
+    request_plan,
+    resolve_plan,
+    serve_in_thread,
+)
+from .zoo import (
+    ZooBuildReport,
+    build_zoo,
+    default_zoo_workloads,
+    verify_zoo,
+    zoo_coverage,
+    zoo_specs,
+)
+
+__all__ = [
+    "EncDecEngine",
+    "PlanResponse",
+    "PlanServer",
+    "PlanService",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "ZooBuildReport",
+    "build_zoo",
+    "default_zoo_workloads",
+    "fetch_stats",
+    "request_plan",
+    "resolve_plan",
+    "serve_in_thread",
+    "verify_zoo",
+    "zoo_coverage",
+    "zoo_specs",
+]

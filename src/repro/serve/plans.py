@@ -1,0 +1,487 @@
+"""Planning-as-a-service: a concurrent plan server over the result store.
+
+``python -m repro serve-plans`` turns the one-shot spec→strategy→result
+pipeline into a long-running service: clients POST an :class:`ExploreSpec`
+as JSON and get back the archived (or freshly searched) `ExploreResult`.
+The serving stack is three read-through tiers:
+
+1. **zoo** — an optional read-only directory of precomputed artifacts
+   (``python -m repro zoo build``); common requests never search.
+2. **store** — the read-write spec-addressed :class:`ResultStore`; every
+   search is published here, so a repeated request replays in milliseconds.
+3. **search** — a bounded worker pool running the actual strategy, with
+   per-spec **in-flight deduplication** (N concurrent identical requests
+   share one search; the other N-1 "join" the winner's future) and **warm
+   evaluator reuse** (requests for the same workload fingerprint share one
+   :class:`CachedEvaluator`, so repeat searches start cache-hot).
+
+Cross-process safety comes from :meth:`ResultStore.exclusive`: a search
+first takes the per-key lockfile, re-checks the store (another process may
+have won), and only then searches — so N identical requests across threads
+*and* processes perform exactly one search.  All counters (hits, misses,
+dedup joins, per-tier latency) are exposed at ``GET /stats``.
+
+Protocol (JSON over HTTP, stdlib ``ThreadingHTTPServer`` — no new deps):
+
+* ``POST /plan`` — body is an ``ExploreSpec`` JSON document (the exact
+  ``ExploreSpec.to_dict()`` format; ``--save-spec`` writes one).  Response:
+  ``{"ok": true, "key": <spec key>, "served_from": "zoo"|"store"|"search",
+  "deduped": bool, "latency_ms": float, "result": <ExploreResult dict>}``.
+  Malformed specs get ``400 {"ok": false, "error": ...}``; search failures
+  get ``500``.
+* ``GET /stats`` — server + store + zoo counters (schema in
+  ``docs/serving.md``).
+* ``GET /healthz`` — liveness probe, ``{"ok": true}``.
+
+See ``docs/serving.md`` for the full protocol and the zoo layout.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, Optional, Tuple
+from urllib import request as _urlrequest
+
+from repro.api.result import ExploreResult
+from repro.api.spec import ExploreSpec
+from repro.api.store import ResultStore, graph_fingerprint, spec_key
+from repro.api.strategies import run
+from repro.api.workloads import build_workload, workload_is_stable
+
+PROTOCOL_VERSION = 1
+
+Searcher = Callable[[ExploreSpec], ExploreResult]
+
+
+# ---------------------------------------------------------------------------
+# tiered resolution (also the cross-process building block: the zoo builder
+# and the multi-process hammer tests call this directly, no HTTP involved)
+# ---------------------------------------------------------------------------
+
+def _validated_get(tier: Optional[ResultStore],
+                   spec: ExploreSpec) -> Optional[ExploreResult]:
+    """A store hit, with the fingerprint revalidation :func:`repro.api.run`
+    applies: a non-stable workload URI (``file:`` — the file can change
+    under an unchanged URI) is re-resolved and its graph digest checked
+    before the artifact replays."""
+    if tier is None:
+        return None
+    cached = tier.get(spec)
+    if cached is None:
+        return None
+    if not workload_is_stable(spec.workload):
+        g = build_workload(spec.workload)
+        if cached.meta.get("graph_sha") not in (None, graph_fingerprint(g)):
+            return None
+    return cached
+
+
+def resolve_plan(spec: ExploreSpec,
+                 store: Optional[ResultStore] = None,
+                 zoo: Optional[ResultStore] = None,
+                 searcher: Optional[Searcher] = None,
+                 lock_timeout: Optional[float] = None,
+                 ) -> Tuple[ExploreResult, str]:
+    """Resolve one spec through the zoo → store → search tiers.
+
+    Returns ``(result, served_from)`` with ``served_from`` one of ``"zoo"``,
+    ``"store"``, ``"search"``.  The search path holds the store's per-key
+    cross-process lock and re-checks the store inside it, so concurrent
+    resolvers of the same spec — in any number of processes — perform
+    exactly one search; the losers replay the winner's artifact.
+    """
+    search = searcher if searcher is not None else (lambda s: run(s))
+    hit = _validated_get(zoo, spec)
+    if hit is not None:
+        return hit, "zoo"
+    if store is None:
+        return search(spec), "search"
+    hit = _validated_get(store, spec)
+    if hit is not None:
+        return hit, "store"
+    with store.exclusive(spec, timeout=lock_timeout):
+        hit = _validated_get(store, spec)
+        if hit is not None:
+            return hit, "store"         # another process searched first
+        res = search(spec)
+        store.put(spec, res)
+    return res, "search"
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class _LatencyWindow:
+    """Latency aggregate per served_from tier: count/mean/max plus p50/p95
+    over a sliding window of the most recent samples."""
+
+    def __init__(self, window: int = 512) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+        self.recent: deque = deque(maxlen=window)
+
+    def record(self, ms: float) -> None:
+        self.count += 1
+        self.total += ms
+        self.max = max(self.max, ms)
+        self.recent.append(ms)
+
+    def snapshot(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0, "mean_ms": 0.0, "max_ms": 0.0,
+                    "p50_ms": 0.0, "p95_ms": 0.0}
+        ordered = sorted(self.recent)
+        q = lambda f: ordered[min(len(ordered) - 1, int(f * len(ordered)))]
+        return {"count": self.count,
+                "mean_ms": round(self.total / self.count, 3),
+                "max_ms": round(self.max, 3),
+                "p50_ms": round(q(0.50), 3),
+                "p95_ms": round(q(0.95), 3)}
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanResponse:
+    """One fulfilled ``/plan`` request."""
+
+    result: ExploreResult
+    key: str
+    served_from: str        # "zoo" | "store" | "search"
+    deduped: bool
+    latency_ms: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "key": self.key,
+            "served_from": self.served_from,
+            "deduped": self.deduped,
+            "latency_ms": round(self.latency_ms, 3),
+            "result": self.result.to_dict(),
+        }
+
+
+class _WarmEvaluator:
+    """One cached evaluator + the mutex serializing searches through it
+    (CachedEvaluator's run-scope bookkeeping is not reentrant across
+    threads; different workloads still search fully in parallel)."""
+
+    def __init__(self, ev) -> None:
+        self.ev = ev
+        self.lock = threading.Lock()
+
+
+class PlanService:
+    """The transport-independent core of the plan server.
+
+    ``plan(spec)`` blocks until the spec is served: hits return synchronously
+    from the zoo/store tiers, misses are funneled through a bounded
+    ``ThreadPoolExecutor`` with in-flight request deduplication.  The HTTP
+    layer (:class:`PlanServer`) is a thin shell over this class, which is
+    also usable fully in-process (tests, ``examples/serve_lm.py``).
+    """
+
+    def __init__(self, store: ResultStore,
+                 zoo: Optional[ResultStore] = None,
+                 workers: int = 2,
+                 eval_backend: Optional[str] = None,
+                 eval_jobs: int = 1,
+                 max_warm_evaluators: int = 8,
+                 lock_timeout: Optional[float] = None) -> None:
+        self.store = store
+        self.zoo = zoo
+        self.workers = max(1, workers)
+        self.eval_backend = eval_backend
+        self.eval_jobs = eval_jobs
+        self.max_warm_evaluators = max(1, max_warm_evaluators)
+        self.lock_timeout = lock_timeout
+        self.started = time.time()
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.workers, thread_name_prefix="plan-search")
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, Future] = {}
+        self._evaluators: "OrderedDict[Tuple[str, int], _WarmEvaluator]" = \
+            OrderedDict()
+        self._closed = False
+        # counters (all mutated under self._lock)
+        self.requests = 0
+        self.searches = 0
+        self.store_hits = 0
+        self.zoo_hits = 0
+        self.dedup_joins = 0
+        self.errors = 0
+        self._latency = {tier: _LatencyWindow()
+                        for tier in ("zoo", "store", "search")}
+
+    # -- request path -----------------------------------------------------
+    def plan(self, spec: ExploreSpec) -> PlanResponse:
+        """Serve one spec (blocking).  Thread-safe: this is what each HTTP
+        handler thread calls."""
+        if self._closed:
+            raise RuntimeError("PlanService is closed")
+        t0 = time.perf_counter()
+        key = spec_key(spec)
+        with self._lock:
+            self.requests += 1
+        # fast path: zoo/store hits answer synchronously (milliseconds, even
+        # while every pool worker is busy searching something else)
+        hit = self._lookup(spec)
+        if hit is not None:
+            result, source = hit
+            return self._done(result, key, source, False, t0)
+        with self._lock:
+            fut = self._inflight.get(key)
+            deduped = fut is not None
+            if deduped:
+                self.dedup_joins += 1
+            else:
+                fut = self._pool.submit(self._fulfil, spec, key)
+                self._inflight[key] = fut
+        try:
+            result, source = fut.result()
+        except Exception:
+            with self._lock:
+                self.errors += 1
+            raise
+        return self._done(result, key, source, deduped, t0)
+
+    def _lookup(self, spec: ExploreSpec
+                ) -> Optional[Tuple[ExploreResult, str]]:
+        hit = _validated_get(self.zoo, spec)
+        if hit is not None:
+            return hit, "zoo"
+        hit = _validated_get(self.store, spec)
+        if hit is not None:
+            return hit, "store"
+        return None
+
+    def _fulfil(self, spec: ExploreSpec,
+                key: str) -> Tuple[ExploreResult, str]:
+        """Pool worker: tiered resolve under the cross-process lock, with a
+        warm evaluator for the spec's workload."""
+        try:
+            return resolve_plan(spec, store=self.store, zoo=self.zoo,
+                                searcher=self._search,
+                                lock_timeout=self.lock_timeout)
+        finally:
+            with self._lock:
+                self._inflight.pop(key, None)
+
+    def _search(self, spec: ExploreSpec) -> ExploreResult:
+        g = build_workload(spec.workload)
+        warm = self._warm_evaluator(g, spec.out_tile)
+        with warm.lock:
+            res = run(spec, graph=g, ev=warm.ev)
+        with self._lock:
+            self.searches += 1
+        return res
+
+    def _warm_evaluator(self, g, out_tile: int) -> _WarmEvaluator:
+        from repro.core.cost import CachedEvaluator
+        from repro.core.engine import make_executor
+
+        key = (graph_fingerprint(g), out_tile)
+        with self._lock:
+            warm = self._evaluators.get(key)
+            if warm is None:
+                warm = _WarmEvaluator(CachedEvaluator(
+                    g, out_tile=out_tile,
+                    executor=make_executor(self.eval_backend,
+                                           self.eval_jobs)))
+                self._evaluators[key] = warm
+            self._evaluators.move_to_end(key)
+            # LRU-evict cold evaluators (skip any mid-search: its searcher
+            # holds the warm lock and will simply be dropped next time)
+            while len(self._evaluators) > self.max_warm_evaluators:
+                for k in list(self._evaluators):
+                    if k != key and not self._evaluators[k].lock.locked():
+                        self._evaluators.pop(k).ev.close()
+                        break
+                else:
+                    break
+        return warm
+
+    def _done(self, result: ExploreResult, key: str, source: str,
+              deduped: bool, t0: float) -> PlanResponse:
+        ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            if source == "zoo":
+                self.zoo_hits += 1
+            elif source == "store":
+                self.store_hits += 1
+            self._latency[source].record(ms)
+        return PlanResponse(result=result, key=key, served_from=source,
+                            deduped=deduped, latency_ms=ms)
+
+    # -- introspection ----------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """The ``GET /stats`` document (schema: ``docs/serving.md``)."""
+        with self._lock:
+            server = {
+                "version": PROTOCOL_VERSION,
+                "uptime_s": round(time.time() - self.started, 3),
+                "workers": self.workers,
+                "requests": self.requests,
+                "searches": self.searches,
+                "store_hits": self.store_hits,
+                "zoo_hits": self.zoo_hits,
+                "dedup_joins": self.dedup_joins,
+                "errors": self.errors,
+                "in_flight": len(self._inflight),
+                "warm_evaluators": len(self._evaluators),
+                "latency_ms": {tier: w.snapshot()
+                               for tier, w in self._latency.items()},
+            }
+        return {
+            "ok": True,
+            "server": server,
+            "store": self.store.counters(),
+            "zoo": self.zoo.counters() if self.zoo is not None else None,
+        }
+
+    def close(self) -> None:
+        self._closed = True
+        self._pool.shutdown(wait=True)
+        with self._lock:
+            evs, self._evaluators = list(self._evaluators.values()), \
+                OrderedDict()
+        for warm in evs:
+            warm.ev.close()
+
+
+# ---------------------------------------------------------------------------
+# HTTP shell
+# ---------------------------------------------------------------------------
+
+class _PlanRequestHandler(BaseHTTPRequestHandler):
+    server_version = f"repro-serve-plans/{PROTOCOL_VERSION}"
+    protocol_version = "HTTP/1.1"
+
+    @property
+    def service(self) -> PlanService:
+        return self.server.service            # type: ignore[attr-defined]
+
+    def log_message(self, fmt: str, *args) -> None:
+        if not getattr(self.server, "quiet", True):
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    def _send(self, code: int, doc: Dict[str, Any]) -> None:
+        payload = json.dumps(doc).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(payload)))
+        self.end_headers()
+        self.wfile.write(payload)
+
+    def do_GET(self) -> None:                                   # noqa: N802
+        path = self.path.rstrip("/") or "/"
+        if path == "/stats":
+            self._send(200, self.service.stats())
+        elif path == "/healthz":
+            self._send(200, {"ok": True})
+        elif path == "/":
+            self._send(200, {
+                "ok": True,
+                "service": "repro-serve-plans",
+                "version": PROTOCOL_VERSION,
+                "endpoints": {
+                    "POST /plan": "body: ExploreSpec JSON -> "
+                                  "{ok, key, served_from, deduped, "
+                                  "latency_ms, result}",
+                    "GET /stats": "server + store + zoo counters",
+                    "GET /healthz": "liveness probe",
+                },
+            })
+        else:
+            self._send(404, {"ok": False, "error": f"no route {self.path}"})
+
+    def do_POST(self) -> None:                                  # noqa: N802
+        if self.path.rstrip("/") != "/plan":
+            self._send(404, {"ok": False, "error": f"no route {self.path}"})
+            return
+        try:
+            length = int(self.headers.get("Content-Length") or 0)
+            spec = ExploreSpec.from_json(
+                self.rfile.read(length).decode("utf-8"))
+        except (ValueError, KeyError, TypeError, UnicodeDecodeError) as err:
+            self._send(400, {"ok": False, "error": f"bad spec: {err}"})
+            return
+        try:
+            resp = self.service.plan(spec)
+        except Exception as err:        # search/store failure -> 500
+            self._send(500, {"ok": False,
+                             "error": f"{type(err).__name__}: {err}"})
+            return
+        self._send(200, {"ok": True, **resp.to_dict()})
+
+
+class PlanServer(ThreadingHTTPServer):
+    """``ThreadingHTTPServer`` bound to a :class:`PlanService`.
+
+    Bind with port 0 to let the OS pick; ``server_address`` then reports
+    the real port.  ``daemon_threads`` so a hung client cannot block
+    shutdown.
+    """
+
+    daemon_threads = True
+
+    def __init__(self, address: Tuple[str, int], service: PlanService,
+                 quiet: bool = True) -> None:
+        super().__init__(address, _PlanRequestHandler)
+        self.service = service
+        self.quiet = quiet
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def close(self) -> None:
+        self.shutdown()
+        self.server_close()
+        self.service.close()
+
+
+def serve_in_thread(service: PlanService, host: str = "127.0.0.1",
+                    port: int = 0) -> PlanServer:
+    """Start a :class:`PlanServer` on a daemon thread (tests, examples)."""
+    server = PlanServer((host, port), service)
+    thread = threading.Thread(target=server.serve_forever,
+                              name="plan-server", daemon=True)
+    thread.start()
+    return server
+
+
+# ---------------------------------------------------------------------------
+# client helpers (stdlib urllib; used by the CLI, CI smoke, and examples)
+# ---------------------------------------------------------------------------
+
+def request_plan(url: str, spec: ExploreSpec,
+                 timeout: float = 600.0) -> Dict[str, Any]:
+    """POST ``spec`` to a running plan server; returns the response doc
+    (with ``result`` left as a plain dict — ``ExploreResult.from_dict`` it
+    if you need the object)."""
+    req = _urlrequest.Request(
+        url.rstrip("/") + "/plan",
+        data=spec.to_json().encode(),
+        headers={"Content-Type": "application/json"},
+        method="POST")
+    with _urlrequest.urlopen(req, timeout=timeout) as resp:
+        return json.loads(resp.read().decode())
+
+
+def fetch_stats(url: str, timeout: float = 30.0) -> Dict[str, Any]:
+    """GET a running plan server's ``/stats`` document."""
+    with _urlrequest.urlopen(url.rstrip("/") + "/stats",
+                             timeout=timeout) as resp:
+        return json.loads(resp.read().decode())

@@ -258,3 +258,96 @@ def test_store_cli_without_dir_exits():
     finally:
         if env_had is not None:
             os.environ["REPRO_STORE_DIR"] = env_had
+
+
+def test_store_ls_json_is_machine_readable(tmp_path, capsys):
+    store_dir = tmp_path / "store"
+    assert main(["explore", "--workload", "synthetic:chain:6?seed=1",
+                 "--strategy", "greedy", "--budget", "100",
+                 "--store-dir", str(store_dir)]) == 0
+    capsys.readouterr()
+    assert main(["store", "ls", "--store-dir", str(store_dir),
+                 "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["root"] == str(store_dir)
+    assert doc["count"] == 1 and doc["total_bytes"] > 0
+    (entry,) = doc["entries"]
+    assert len(entry["key"]) == 64
+    assert entry["workload"] == "synthetic:chain:6?seed=1"
+    assert entry["strategy"] == "greedy"
+    assert entry["size"] > 0 and entry["mtime"] > 0
+    # full keys round-trip into --seed-from-store / store maintenance
+    assert (store_dir / f"{entry['key']}.json").is_file()
+
+
+def test_zoo_build_dry_run_ls_verify(tmp_path, capsys):
+    zoo_dir = tmp_path / "zoo"
+    grid = ["--zoo-dir", str(zoo_dir),
+            "--workloads", "synthetic:chain:6?seed=1",
+            "--strategies", "greedy", "--objectives", "ema,energy:0.002",
+            "--budget", "100"]
+
+    assert main(["zoo", "build", "--dry-run"] + grid) == 0
+    out = capsys.readouterr().out
+    assert "2 zoo specs (dry run" in out and "energy:0.002" in out
+    assert not zoo_dir.exists()                 # dry run builds nothing
+
+    assert main(["zoo", "ls", "--json"] + grid) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["archived"] == 0 and doc["missing"] == 2
+
+    assert main(["zoo", "build"] + grid) == 0
+    assert "2 built" in capsys.readouterr().out
+    assert main(["zoo", "build"] + grid) == 0   # resumable: all replay
+    assert "2 already archived" in capsys.readouterr().out
+
+    assert main(["zoo", "ls", "--json"] + grid) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["archived"] == 2 and doc["missing"] == 0
+    assert all(r["status"] == "archived" for r in doc["rows"])
+
+    assert main(["zoo", "verify", "--zoo-dir", str(zoo_dir)]) == 0
+    assert "2 artifacts verified clean" in capsys.readouterr().out
+
+
+def test_explore_seed_from_store_warm_starts(tmp_path, capsys):
+    store_dir = tmp_path / "store"
+    base = ["--workload", "synthetic:layered:8?seed=3", "--strategy", "ga",
+            "--opt", "population=10", "--store-dir", str(store_dir)]
+    assert main(["explore", "--budget", "200"] + base) == 0
+    capsys.readouterr()
+    assert main(["store", "ls", "--store-dir", str(store_dir),
+                 "--json"]) == 0
+    key = json.loads(capsys.readouterr().out)["entries"][0]["key"]
+
+    # a unique >=8-char prefix resolves; the seeded spec addresses a NEW
+    # store entry (seed_from_keys is part of the spec hash)
+    assert main(["explore", "--budget", "400",
+                 "--seed-from-store", key[:12]] + base) == 0
+    capsys.readouterr()
+    assert main(["store", "ls", "--store-dir", str(store_dir),
+                 "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["count"] == 2
+
+    # guard rails: needs a store, a ga-family strategy, and no --spec
+    with pytest.raises(SystemExit, match="resolves keys against a store"):
+        main(["explore", "--workload", "x", "--strategy", "ga",
+              "--no-store", "--seed-from-store", key[:12]])
+    with pytest.raises(SystemExit, match="seed_from_keys"):
+        main(["explore", "--workload", "x", "--strategy", "greedy",
+              "--store-dir", str(store_dir), "--seed-from-store", key[:12]])
+    assert main(["explore", "--budget", "200",
+                 "--seed-from-store", "deadbeef"] + base) == 2
+    assert "no store entry matches" in capsys.readouterr().err
+
+
+def test_serve_plans_cli_help_and_missing_store():
+    with pytest.raises(SystemExit):            # argparse --help exits 0
+        main(["serve-plans", "--help"])
+    env_had = os.environ.pop("REPRO_STORE_DIR", None)
+    try:
+        with pytest.raises(SystemExit, match="serve-plans needs"):
+            main(["serve-plans", "--port", "0"])
+    finally:
+        if env_had is not None:
+            os.environ["REPRO_STORE_DIR"] = env_had

@@ -1,0 +1,267 @@
+"""Concurrency hardening of `ResultStore`: per-key cross-process locking,
+stale-lock/stale-temp recovery, write/gc race protection, quarantine
+safety under concurrent overwrites, and a multi-process hammer proving
+"N identical requests -> exactly one search" end to end.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.api import (
+    ExploreSpec,
+    ResultStore,
+    StoreLockTimeout,
+    StoreReadOnly,
+    run,
+    spec_key,
+)
+from repro.core import HWSpace, Objective
+from repro.serve.plans import resolve_plan
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src"
+KEY = "a" * 64
+
+
+def greedy_spec(**kw):
+    defaults = dict(
+        workload="synthetic:chain:6?seed=1",
+        strategy="greedy",
+        objective=Objective(metric="ema", alpha=None),
+        hw=HWSpace(mode="fixed"),
+        sample_budget=100,
+        seed=0,
+    )
+    defaults.update(kw)
+    return ExploreSpec(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# exclusive(): the per-key lock
+# ---------------------------------------------------------------------------
+
+def test_exclusive_is_mutually_exclusive_across_threads(tmp_path):
+    store = ResultStore(tmp_path)
+    inside = []
+    overlapped = []
+
+    def worker():
+        with store.exclusive(KEY, timeout=30.0, poll=0.001):
+            inside.append(1)
+            if len(inside) - len(overlapped) > 1:
+                overlapped.append(1)
+            time.sleep(0.01)
+            overlapped.append(0)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(inside) == 6
+    assert 1 not in overlapped          # never two holders at once
+    assert not store.lock_path(KEY).exists()
+
+
+def test_exclusive_times_out_with_holder_info(tmp_path):
+    store = ResultStore(tmp_path)
+    held = threading.Event()
+    release = threading.Event()
+
+    def holder():
+        with store.exclusive(KEY):
+            held.set()
+            release.wait(10)
+
+    t = threading.Thread(target=holder)
+    t.start()
+    held.wait(10)
+    try:
+        with pytest.raises(StoreLockTimeout) as exc:
+            with store.exclusive(KEY, timeout=0.2, poll=0.01):
+                pass
+        assert str(os.getpid()) in str(exc.value)   # holder pid surfaced
+    finally:
+        release.set()
+        t.join()
+
+
+def test_exclusive_reclaims_stale_lock(tmp_path):
+    store = ResultStore(tmp_path)
+    lock = store.lock_path(KEY)
+    lock.write_text("999999@deadhost 0.0\n")
+    old = time.time() - 10_000
+    os.utime(lock, (old, old))
+    t0 = time.monotonic()
+    with store.exclusive(KEY, timeout=5.0, stale_after=1.0, poll=0.01):
+        assert lock.exists()            # we hold a *fresh* lock now
+    assert time.monotonic() - t0 < 4.0
+    assert not lock.exists()
+    assert not list(tmp_path.glob("*.stale-*"))     # reclaim leaves no grave
+
+
+def test_exclusive_waits_for_fresh_lock(tmp_path):
+    """A fresh lock (live holder) is never reclaimed, only waited on."""
+    store = ResultStore(tmp_path)
+    store.lock_path(KEY).write_text("live\n")
+    with pytest.raises(StoreLockTimeout):
+        with store.exclusive(KEY, timeout=0.2, poll=0.01):
+            pass
+    assert store.lock_path(KEY).exists()
+
+
+def test_read_only_store_rejects_mutation(tmp_path):
+    rw = ResultStore(tmp_path / "zoo")
+    spec = greedy_spec()
+    rw.put(spec, run(spec))
+    ro = ResultStore(tmp_path / "zoo", read_only=True)
+    assert ro.get(spec) is not None
+    for call in (lambda: ro.put(spec, run(spec)),
+                 lambda: ro.gc(0),
+                 lambda: ro.clear(),
+                 lambda: ro.exclusive(KEY).__enter__()):
+        with pytest.raises(StoreReadOnly):
+            call()
+    with pytest.raises(FileNotFoundError):
+        ResultStore(tmp_path / "missing", read_only=True)
+
+
+# ---------------------------------------------------------------------------
+# write/gc race protection
+# ---------------------------------------------------------------------------
+
+def test_dotfile_debris_is_invisible_to_readers(tmp_path):
+    store = ResultStore(tmp_path)
+    spec = greedy_spec()
+    store.put(spec, run(spec))
+    (tmp_path / ".tmp-abc123.tmp").write_text("in-progress write")
+    (tmp_path / f".{KEY}.lock").write_text("held\n")
+    (tmp_path / ".sneaky.json").write_text("{}")
+    assert len(store) == 1
+    assert [e.key for e in store.entries()] == [spec_key(spec)]
+    assert store.total_bytes() == store.path_for(spec).stat().st_size
+    with pytest.raises(KeyError):
+        store.resolve_key(".sneaky.")
+
+
+def test_gc_spares_fresh_debris_and_sweeps_stale(tmp_path):
+    store = ResultStore(tmp_path)
+    spec = greedy_spec()
+    store.put(spec, run(spec))
+    fresh_tmp = tmp_path / ".tmp-fresh.tmp"
+    fresh_tmp.write_text("a concurrent put in progress")
+    stale_tmp = tmp_path / ".tmp-stale.tmp"
+    stale_tmp.write_text("crashed writer leftovers")
+    stale_lock = tmp_path / f".{KEY}.lock"
+    stale_lock.write_text("crashed holder\n")
+    old = time.time() - 10_000
+    for p in (stale_tmp, stale_lock):
+        os.utime(p, (old, old))
+    removed, _freed = store.gc(max_bytes=1 << 30, stale_after=600.0)
+    assert removed == 2
+    assert fresh_tmp.exists()                   # live write untouched
+    assert not stale_tmp.exists() and not stale_lock.exists()
+    assert len(store) == 1                      # the artifact survived
+
+
+def test_gc_always_removes_quarantined_artifacts(tmp_path):
+    store = ResultStore(tmp_path)
+    spec = greedy_spec()
+    path = store.put(spec, run(spec))
+    path.write_text("garbage")                  # corrupt it in place
+    assert store.get(spec) is None              # quarantined -> miss
+    assert store.quarantined == 1
+    assert path.with_suffix(".json.corrupt").exists()
+    store.gc(max_bytes=1 << 30)
+    assert not path.with_suffix(".json.corrupt").exists()
+
+
+def test_quarantine_preserves_concurrent_fresh_overwrite(tmp_path):
+    """A reader holding stale corrupt bytes must not quarantine the valid
+    artifact a concurrent writer just published over them."""
+    store = ResultStore(tmp_path)
+    spec = greedy_spec()
+    path = store.put(spec, run(spec))
+    good = path.read_bytes()
+    store._quarantine(path, reason="judged corrupt from stale bytes",
+                      expected_payload=b"some old corrupt payload")
+    assert path.read_bytes() == good            # fresh write preserved
+    assert store.quarantined == 0
+    assert not path.with_suffix(".json.corrupt").exists()
+
+
+def test_crash_mid_write_then_recovery(tmp_path):
+    """A writer that died mid-``put`` while holding the key lock leaves a
+    stale temp file and a stale lock; the next resolver reclaims the lock,
+    searches, publishes — and gc clears the debris.  Nothing is ever
+    quarantined."""
+    store = ResultStore(tmp_path)
+    spec = greedy_spec()
+    key = spec_key(spec)
+    stale_tmp = tmp_path / ".tmp-dead.tmp"
+    stale_tmp.write_text('{"half": "an artifa')
+    lock = store.lock_path(key)
+    lock.write_text("999999@deadhost 0.0\n")
+    old = time.time() - 10_000
+    for p in (stale_tmp, lock):
+        os.utime(p, (old, old))
+    res, source = resolve_plan(spec, store=store)
+    assert source == "search"
+    assert store.get(spec).to_json() == res.to_json()
+    assert not list(tmp_path.glob("*.corrupt"))
+    store.gc(max_bytes=1 << 30)
+    assert not stale_tmp.exists()
+    assert sorted(p.name for p in tmp_path.iterdir()) == [f"{key}.json"]
+
+
+# ---------------------------------------------------------------------------
+# the multi-process hammer: N processes, one spec, exactly one search
+# ---------------------------------------------------------------------------
+
+_HAMMER_WORKER = """
+import sys, time, pathlib
+store_dir, go_file = sys.argv[1], sys.argv[2]
+from repro.api import ResultStore
+from repro.serve.plans import resolve_plan
+from test_store_concurrency import greedy_spec
+spec = greedy_spec(workload="synthetic:layered:10?seed=9")
+store = ResultStore(store_dir)
+while not pathlib.Path(go_file).exists():
+    time.sleep(0.005)
+res, source = resolve_plan(spec, store=store)
+print(f"{source} {res.cost!r}")
+"""
+
+
+def test_multiprocess_hammer_searches_exactly_once(tmp_path):
+    n = 4
+    store_dir = tmp_path / "store"
+    go_file = tmp_path / "go"
+    env = dict(os.environ,
+               PYTHONPATH=f"{REPO_SRC}:{Path(__file__).parent}")
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _HAMMER_WORKER, str(store_dir), str(go_file)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+        for _ in range(n)]
+    go_file.write_text("go")
+    outs = [p.communicate(timeout=120) for p in procs]
+    assert all(p.returncode == 0 for p in procs), outs
+    lines = [out.strip() for out, _err in outs]
+    sources = sorted(line.split()[0] for line in lines)
+    assert sources == ["search"] + ["store"] * (n - 1), lines
+    assert len(set(lines)) <= 2 and len({l.split()[1] for l in lines}) == 1
+
+    # the hammered store is bitwise-identical to a serial run's store
+    spec = greedy_spec(workload="synthetic:layered:10?seed=9")
+    serial = ResultStore(tmp_path / "serial")
+    resolve_plan(spec, store=serial)
+    key = spec_key(spec)
+    assert (store_dir / f"{key}.json").read_bytes() == \
+        (tmp_path / "serial" / f"{key}.json").read_bytes()
+    # and no debris survived: one artifact, no locks, no temps, no corpses
+    assert sorted(p.name for p in store_dir.iterdir()) == [f"{key}.json"]
