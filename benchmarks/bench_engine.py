@@ -1,0 +1,84 @@
+"""Evaluation-engine backend microbench: generation-shaped miss batches.
+
+Times exactly the work the executor seam sees during a GA generation —
+``finish_cost`` over a batch of distinct ``(structure, hardware-point)``
+queries whose structure half is already memoized — for every backend that
+resolves on this machine.  This isolates the batched arithmetic from graph
+analysis, so the rows answer "which backend should ``--eval-backend`` use
+here?" directly.
+
+Emits ``engine.<workload>.<backend>.b<batch>,us,x<speedup>`` rows where
+``us`` is per-batch wall time (best of ``REPEATS`` after a warm-up that
+also pays any jit compilation) and the derived column is the speedup over
+the serial scalar loop.  The jax rows are skipped — with a note, not an
+error — when jax is not installed.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.api import build_workload
+from repro.core import CostKernel, HWSpace
+from repro.core.engine import make_executor
+from repro.core.partition import random_partition
+
+from .common import FULL, emit
+
+WORKLOADS = [("resnet50", "netlib:resnet50"),
+             ("layered24", "synthetic:layered:24?seed=7")]
+BATCHES = [64, 512, 4096] if FULL else [64, 512]
+BACKENDS = ["serial", "vector", "jax"]
+REPEATS = 5
+
+
+def _queries(g, n: int):
+    """n distinct generation-shaped queries: random partitions x sampled
+    hardware points (the co-exploration miss pattern)."""
+    rng = random.Random(7)
+    hw = HWSpace(mode="separate")
+    out = []
+    while len(out) < n:
+        acc = hw.sample(rng)
+        for s in random_partition(g, rng, mean_size=rng.uniform(1.5, 6.0)):
+            out.append((frozenset(s), acc))
+    return out[:n]
+
+
+def _time_batch(ex, kernel, queries) -> float:
+    ex.evaluate(kernel, queries)            # warm-up: structure memo + jit
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.time()
+        ex.evaluate(kernel, queries)
+        best = min(best, (time.time() - t0) * 1e6)
+    return best
+
+
+def main() -> None:
+    from repro.core.engine import backend_status
+
+    for wname, uri in WORKLOADS:
+        g = build_workload(uri)
+        for n in BATCHES:
+            queries = _queries(g, n)
+            base_us = None
+            for backend in BACKENDS:
+                ok, why = backend_status(backend)
+                if not ok:
+                    emit(f"engine.{wname}.{backend}.b{n}", 0.0, "skipped")
+                    continue
+                ex = make_executor(backend, 1)
+                try:
+                    us = _time_batch(ex, CostKernel(g), queries)
+                finally:
+                    ex.close()
+                if backend == "serial":
+                    base_us = us
+                speedup = base_us / us if base_us else 1.0
+                emit(f"engine.{wname}.{backend}.b{n}", us, f"x{speedup:.2f}")
+
+
+if __name__ == "__main__":
+    main()

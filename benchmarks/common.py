@@ -39,8 +39,9 @@ def configure(store_dir: Optional[str] = None, jobs: int = 1,
 
     ``jobs`` fans out whole strategies; ``eval_jobs``/``eval_backend``
     parallelize cost evaluation *within* one strategy through the
-    evaluation engine (`repro.core.engine`) — results are identical either
-    way, so both axes are safe under the result store.
+    evaluation engine (`repro.core.engine`: serial | process | vector |
+    jax) — results are identical either way, so both axes are safe under
+    the result store.
     """
     global STORE, JOBS, EVAL_JOBS, EVAL_BACKEND
     STORE = ResultStore(store_dir) if store_dir else None

@@ -3,7 +3,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig11,...]
         [--store-dir runs/store] [--jobs N] [--no-store]
-        [--eval-jobs N] [--eval-backend serial|process|vector]
+        [--eval-jobs N] [--eval-backend serial|process|vector|jax]
 
 Reduced sample budgets by default (REPRO_BENCH_FULL=1 for the paper's
 400k/50k budgets).  Emits `name,us_per_call,derived` CSV rows.
@@ -18,35 +18,32 @@ independent strategies of one benchmark point in N worker processes.
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
 import time
 import traceback
 
-from . import (
-    bench_fig3,
-    bench_fig11,
-    bench_fig12_13_14,
-    bench_kernels,
-    bench_roofline,
-    bench_serve,
-    bench_table3,
-    bench_tables12,
-    bench_trace,
-    bench_workloads,
-)
-
+# bench name -> module (imported at dispatch time: the kernel/serve/roofline
+# benches need jax, and a lazy registry keeps --help and the cost-model
+# benches working without it)
 BENCHES = {
-    "fig3": bench_fig3.main,
-    "fig11": bench_fig11.main,
-    "tables12": bench_tables12.main,
-    "fig12_13_14": bench_fig12_13_14.main,
-    "table3": bench_table3.main,
-    "workloads": bench_workloads.main,
-    "trace": bench_trace.main,
-    "serve": bench_serve.main,
-    "kernels": bench_kernels.main,
-    "roofline": bench_roofline.main,
+    "fig3": "bench_fig3",
+    "fig11": "bench_fig11",
+    "tables12": "bench_tables12",
+    "fig12_13_14": "bench_fig12_13_14",
+    "table3": "bench_table3",
+    "workloads": "bench_workloads",
+    "trace": "bench_trace",
+    "engine": "bench_engine",
+    "serve": "bench_serve",
+    "kernels": "bench_kernels",
+    "roofline": "bench_roofline",
 }
+
+
+def _bench_main(name: str):
+    module = importlib.import_module(f"benchmarks.{BENCHES[name]}")
+    return module.main
 
 
 def main() -> None:
@@ -67,20 +64,30 @@ def main() -> None:
                     help="evaluation-engine workers for batched cost "
                          "queries within one strategy")
     ap.add_argument("--eval-backend", default=None,
-                    choices=["serial", "process", "vector"],
-                    help="evaluation-engine executor (default: process "
-                         "when --eval-jobs > 1, else serial)")
+                    help="evaluation-engine executor: serial | process | "
+                         "vector | jax (default: process when "
+                         "--eval-jobs > 1, else serial)")
     args = ap.parse_args()
+    if args.eval_backend is not None:
+        from repro.core.engine import backend_status
+
+        ok, why = backend_status(args.eval_backend)
+        if not ok:
+            raise SystemExit(f"error: {why}")
     common.configure(store_dir=None if args.no_store else args.store_dir,
                      jobs=args.jobs, eval_jobs=args.eval_jobs,
                      eval_backend=args.eval_backend)
     names = list(BENCHES) if not args.only else args.only.split(",")
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"error: unknown bench {unknown}; "
+                         f"valid: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         t0 = time.time()
         try:
-            BENCHES[name]()
+            _bench_main(name)()
         except Exception as e:
             failures += 1
             print(f"{name}.ERROR,{(time.time() - t0) * 1e6:.0f},"

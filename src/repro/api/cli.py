@@ -35,8 +35,11 @@ Subcommands:
 ``compare`` at a spec-addressed result store: a spec that was already
 searched replays its archived result instantly instead of re-searching.
 ``--eval-jobs N`` / ``--eval-backend`` parallelize cost evaluation *within*
-one strategy through the evaluation engine (``repro.core.engine``); every
-backend returns identical results.
+one strategy through the evaluation engine (``repro.core.engine``:
+``serial`` | ``process`` | ``vector`` | ``jax``); every backend returns
+bit-identical results, so they are pure runtime knobs (``jax`` batches
+whole GA generations onto the accelerator and needs the optional jax
+dependency).
 
 Examples::
 
@@ -589,10 +592,11 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                    help="evaluation-engine workers for batched cost queries "
                         "within one strategy (results are identical to "
                         "serial evaluation)")
-    p.add_argument("--eval-backend", default=None,
-                   choices=["serial", "process", "vector"],
-                   help="evaluation-engine executor (default: process when "
-                        "--eval-jobs > 1, else serial)")
+    p.add_argument("--eval-backend", default=None, metavar="NAME",
+                   help="evaluation-engine executor: serial | process | "
+                        "vector | jax (default: process when --eval-jobs "
+                        "> 1, else serial; jax needs the optional jax "
+                        "dependency and is checked up front)")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -705,8 +709,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "them)")
     psp.add_argument("--eval-jobs", type=int, default=1,
                      help="evaluation-engine workers per search")
-    psp.add_argument("--eval-backend", default=None,
-                     choices=["serial", "process", "vector"])
+    psp.add_argument("--eval-backend", default=None, metavar="NAME",
+                     help="evaluation-engine executor per search (serial | "
+                          "process | vector | jax)")
     psp.add_argument("--port-file", metavar="PATH",
                      help="write the bound URL here once listening "
                           "(CI/scripts; pairs with --port 0)")
@@ -771,6 +776,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     pzv.set_defaults(fn=cmd_zoo_verify)
 
     args = ap.parse_args(argv)
+    backend = getattr(args, "eval_backend", None)
+    if backend is not None:
+        # pre-flight: fail with the engine's friendly message (unknown name
+        # lists the valid backends; an unavailable jax reports the import
+        # failure) before any search work starts
+        from repro.core.engine import backend_status
+
+        ok, why = backend_status(backend)
+        if not ok:
+            print(f"error: {why}", file=sys.stderr)
+            return 2
     try:
         return args.fn(args)
     except (KeyError, ValueError, TypeError, OSError, RuntimeError) as err:

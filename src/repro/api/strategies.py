@@ -89,8 +89,8 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
     accept (the GA takes ``init_groups``).
 
     ``eval_backend``/``eval_jobs`` pick the evaluation-engine executor for
-    batched in-strategy cost queries (``serial`` | ``process`` | ``vector``;
-    ``eval_jobs > 1`` defaults the backend to ``process`` — see
+    batched in-strategy cost queries (``serial`` | ``process`` | ``vector``
+    | ``jax``; ``eval_jobs > 1`` defaults the backend to ``process`` — see
     :mod:`repro.core.engine`).  Every backend returns identical results, so
     these are runtime knobs, deliberately *not* part of the spec (a stored
     artifact addresses what was searched, not how it was scheduled).  They

@@ -20,27 +20,63 @@ identical costs and search results never depend on the backend:
   (co-exploration populations).  Bit-identical to the scalar kernel; inputs
   that could round differently in float64 (``> 2**53``) or overflow int64
   products fall back to the scalar path element-wise.
+* ``jax``     — same struct-of-arrays batching as ``vector``, but the
+  capacity/streaming/weight-sharing arithmetic runs as a jit-compiled jnp
+  kernel (optionally a Pallas kernel for the streaming-block sweep) on
+  whatever device jax targets (:mod:`repro.kernels.finish_batch`).  Wins on
+  accelerator-resident generation evaluation — a whole GA generation's
+  distinct queries become one device call.  The same element-wise guards as
+  ``vector`` route out-of-range inputs to the scalar path, so it is
+  bit-identical to ``serial`` too.  jax is an optional dependency: when it
+  is not importable, :func:`make_executor` reports *why* and every other
+  backend keeps working.
 
 Pick a backend by name via :func:`make_executor` — the seam the API layer's
-``eval_backend``/``eval_jobs`` options thread through.
+``eval_backend``/``eval_jobs`` options thread through;
+:func:`backend_status` answers "would that name resolve?" without building
+anything (the CLI's pre-flight check).
 """
 
 from __future__ import annotations
 
-import math
+import os
 from concurrent.futures import ProcessPoolExecutor
 from dataclasses import fields as dataclass_fields
 from typing import List, Optional, Sequence, Tuple
 
-from .cost import AcceleratorConfig, CostKernel, SubgraphCost, finish_cost
+from .cost import (
+    STREAM_REASON,
+    AcceleratorConfig,
+    CostKernel,
+    SubgraphCost,
+    SubgraphStructure,
+    finish_cost,
+)
 from .graph import Graph
 
 EvalQuery = Tuple[frozenset, AcceleratorConfig]
 
-# element-wise scalar-fallback guards for the vector backend: float64 stays
-# exact below 2**53; int64 products of two values below 2**31 cannot overflow
+# element-wise scalar-fallback guards for the array backends (vector/jax):
+# float64 stays exact below 2**53; int64 products of two values below 2**31
+# cannot overflow
 _FLOAT_EXACT = 1 << 53
 _PROD_SAFE = 1 << 31
+
+
+def needs_scalar_fallback(st: SubgraphStructure,
+                          acc: AcceleratorConfig) -> bool:
+    """True when one query must take the scalar ``finish_cost`` path.
+
+    The array backends batch the capacity/streaming arithmetic through
+    float64-capable numerics, which are exact only while every operand stays
+    below ``2**53`` and every int64 product's factors stay below ``2**31``;
+    a failed schedule short-circuits in ``finish_cost`` and has nothing to
+    batch.  The boundary is inclusive (``>=``) so the batched path never
+    touches the first representable value that *could* round differently.
+    """
+    return (st.sched_error is not None
+            or max(st.footprint, st.weight_total) >= _PROD_SAFE
+            or max(acc.glb_bytes, acc.wbuf_bytes) >= _FLOAT_EXACT)
 
 
 class Executor:
@@ -165,17 +201,30 @@ class ProcessExecutor(Executor):
             self._pool_kernel = None
 
 
-# -- vector backend ----------------------------------------------------------
+# -- array backends (vector / jax) -------------------------------------------
 
-class VectorExecutor(Executor):
-    """NumPy-vectorized ``finish_cost`` over a whole batch.
+class _BatchedFinishExecutor(Executor):
+    """Shared struct-of-arrays structure for the array backends.
 
     Structures come from the kernel memo (one ``derive_schedule`` per
-    distinct node set, like every backend); the capacity/streaming/weight-
-    sharing arithmetic then runs as one vectorized pass over the batch.
+    distinct node set, like every backend).  The base class handles the
+    guard partition (:func:`needs_scalar_fallback` lanes take the scalar
+    ``finish_cost`` path element-wise), the int64 struct-of-arrays packing,
+    and stitching array results back into :class:`SubgraphCost`s; a
+    subclass only supplies :meth:`_finish_arrays` — the batched
+    capacity/streaming/weight-sharing arithmetic itself.  Keeping one
+    packing/stitching path means a new array backend cannot diverge from
+    ``vector`` anywhere except inside the arithmetic the parity tests pin.
     """
 
-    name = "vector"
+    def _finish_arrays(self, fp, w_total, single, glb, wbuf, shared, share):
+        """Batched ``finish_cost`` arithmetic over equal-length arrays.
+
+        Returns ``(wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow,
+        stream, feasible)`` arrays (int64 / bool), index-aligned with the
+        inputs.
+        """
+        raise NotImplementedError
 
     def evaluate(self, kernel: CostKernel,
                  queries: Sequence[EvalQuery]) -> List[SubgraphCost]:
@@ -186,9 +235,7 @@ class VectorExecutor(Executor):
         structs = [kernel.structure(nodes) for nodes, _ in queries]
         vec_idx = []
         for i, ((_, acc), st) in enumerate(zip(queries, structs)):
-            if (st.sched_error is not None
-                    or max(st.footprint, st.weight_total) >= _PROD_SAFE
-                    or max(acc.glb_bytes, acc.wbuf_bytes) >= _FLOAT_EXACT):
+            if needs_scalar_fallback(st, acc):
                 results[i] = finish_cost(st, acc)  # scalar fallback
             else:
                 vec_idx.append(i)
@@ -206,29 +253,19 @@ class VectorExecutor(Executor):
         share = np.maximum(
             np.array([a.weight_share_cores for a in accs], dtype=np.int64), 1)
 
-        wr = w_total // share
-        glb_cap = glb
-        wbuf_cap = np.where(shared, glb, wbuf)
-        overflow = np.where(shared, fp + wr > glb_cap, fp > glb_cap)
-        infeasible_buf = overflow & ~single
-        stream = overflow & single
-        # mirrors _stream_single_layer: math.ceil of a float64 true division
-        n_blocks = np.maximum(
-            np.ceil(fp / np.maximum(glb_cap, 1)).astype(np.int64), 1)
-        ema_w = np.where(stream, wr * n_blocks, w_total)
-        fp_out = np.where(stream, np.minimum(fp, glb_cap), fp)
-        w_overflow = ~shared & ~single & ~infeasible_buf & (wr > wbuf_cap)
-        feasible = ~(infeasible_buf | w_overflow)
+        (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow, stream,
+         feasible) = self._finish_arrays(fp, w_total, single, glb, wbuf,
+                                         shared, share)
 
         for j, i in enumerate(vec_idx):
-            st, acc = sts[j], accs[j]
+            st = sts[j]
             if infeasible_buf[j]:
                 reason = ("shared buffer overflow" if shared[j]
                           else "global buffer overflow")
             elif w_overflow[j]:
                 reason = "weight buffer overflow"
             elif stream[j]:
-                reason = f"streamed in {int(n_blocks[j])} blocks"
+                reason = f"{STREAM_REASON} in {int(n_blocks[j])} blocks"
             else:
                 reason = ""
             results[i] = SubgraphCost(
@@ -247,21 +284,130 @@ class VectorExecutor(Executor):
         return results  # type: ignore[return-value]
 
 
-BACKENDS = ("serial", "process", "vector")
+class VectorExecutor(_BatchedFinishExecutor):
+    """NumPy-vectorized ``finish_cost`` over a whole batch.
+
+    The capacity/streaming/weight-sharing arithmetic runs as one vectorized
+    pass over the batch.  Wins when one subgraph is probed at many hardware
+    points (co-exploration populations).
+    """
+
+    name = "vector"
+
+    def _finish_arrays(self, fp, w_total, single, glb, wbuf, shared, share):
+        import numpy as np
+
+        wr = w_total // share
+        glb_cap = glb
+        wbuf_cap = np.where(shared, glb, wbuf)
+        overflow = np.where(shared, fp + wr > glb_cap, fp > glb_cap)
+        infeasible_buf = overflow & ~single
+        stream = overflow & single
+        # mirrors _stream_single_layer: math.ceil of a float64 true division
+        n_blocks = np.maximum(
+            np.ceil(fp / np.maximum(glb_cap, 1)).astype(np.int64), 1)
+        ema_w = np.where(stream, wr * n_blocks, w_total)
+        fp_out = np.where(stream, np.minimum(fp, glb_cap), fp)
+        w_overflow = ~shared & ~single & ~infeasible_buf & (wr > wbuf_cap)
+        feasible = ~(infeasible_buf | w_overflow)
+        return (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow,
+                stream, feasible)
+
+
+# -- jax backend --------------------------------------------------------------
+
+# probed lazily and cached: (available, detail); detail is the import
+# failure when unavailable, so callers can say *why* jax is missing
+_JAX_STATUS: Optional[Tuple[bool, str]] = None
+
+
+def jax_status() -> Tuple[bool, str]:
+    """``(available, detail)`` for the ``jax`` backend.
+
+    ``detail`` is ``""`` when the batched kernel module imports cleanly and
+    the import failure (e.g. ``ModuleNotFoundError: No module named 'jax'``)
+    otherwise.  The probe runs once per process; jax is an optional
+    dependency, so failure here is a normal, reportable state — never an
+    error by itself.
+    """
+    global _JAX_STATUS
+    if _JAX_STATUS is None:
+        try:
+            from repro.kernels import finish_batch  # noqa: F401
+            _JAX_STATUS = (True, "")
+        except Exception as err:  # ImportError or anything the import raised
+            _JAX_STATUS = (False, f"{type(err).__name__}: {err}")
+    return _JAX_STATUS
+
+
+class JaxExecutor(_BatchedFinishExecutor):
+    """jit-compiled jnp/Pallas ``finish_cost`` over a whole generation.
+
+    The same struct-of-arrays batching as ``vector``, evaluated on-device
+    through :func:`repro.kernels.finish_batch.finish_cost_batch` (int64
+    arithmetic under ``jax.experimental.enable_x64``, batches padded to
+    powers of two so GA generations of drifting size reuse compiled
+    kernels).  ``pallas=True`` routes the hot streaming-block sweep through
+    the Pallas kernel variant (interpret mode off-TPU); default comes from
+    ``$REPRO_JAX_PALLAS``.  Both variants are bit-identical to ``serial``.
+    """
+
+    name = "jax"
+
+    def __init__(self, pallas: Optional[bool] = None) -> None:
+        if pallas is None:
+            pallas = os.environ.get("REPRO_JAX_PALLAS", "0") == "1"
+        self.pallas = bool(pallas)
+
+    def _finish_arrays(self, fp, w_total, single, glb, wbuf, shared, share):
+        from repro.kernels import finish_batch
+
+        return finish_batch.finish_cost_batch(
+            fp, w_total, single, glb, wbuf, shared, share,
+            use_pallas=self.pallas)
+
+
+BACKENDS = ("serial", "process", "vector", "jax")
+
+
+def backend_status(backend: str) -> Tuple[bool, str]:
+    """Would ``make_executor(backend)`` succeed?  ``(ok, why_not)``.
+
+    The messages here are the single source for both :func:`make_executor`
+    errors and the CLI's ``--eval-backend`` pre-flight check, mirroring
+    ``Objective.metric`` validation: an unknown name lists the valid
+    backends; an unavailable ``jax`` reports the underlying import failure.
+    """
+    if backend not in BACKENDS:
+        return (False,
+                f"unknown eval backend {backend!r}; valid backends: "
+                f"{', '.join(BACKENDS)}")
+    if backend == "jax":
+        ok, detail = jax_status()
+        if not ok:
+            return (False,
+                    f"eval backend 'jax' is unavailable ({detail}); "
+                    f"install jax (CPU wheel: pip install jax) or use one "
+                    f"of: {', '.join(b for b in BACKENDS if b != 'jax')}")
+    return (True, "")
 
 
 def make_executor(backend: Optional[str] = None, jobs: int = 1) -> Executor:
     """Resolve an ``eval_backend``/``eval_jobs`` pair to an executor.
 
     ``backend=None`` picks ``process`` when ``jobs > 1``, else ``serial``.
+    Unknown names raise a :class:`ValueError` listing :data:`BACKENDS`; an
+    unavailable ``jax`` raises one explaining why (the import failure).
     """
     if backend is None:
         backend = "process" if jobs and jobs > 1 else "serial"
+    ok, why = backend_status(backend)
+    if not ok:
+        raise ValueError(why)
     if backend == "serial":
         return SerialExecutor()
     if backend == "process":
         return ProcessExecutor(jobs=jobs)
     if backend == "vector":
         return VectorExecutor()
-    raise ValueError(
-        f"unknown eval backend {backend!r}; known: {', '.join(BACKENDS)}")
+    return JaxExecutor()

@@ -1,6 +1,12 @@
 """Pallas TPU kernels for the perf-critical sub-DAGs (DESIGN.md §6):
 flash attention, fused SwiGLU FFN, fused RMSNorm — each with a pure-jnp
-oracle in ref.py and interpret-mode validation in tests/test_kernels.py."""
+oracle in ref.py and interpret-mode validation in tests/test_kernels.py.
+
+``finish_batch`` (imported as a submodule, not re-exported here) holds the
+batched cost-kernel arithmetic behind the ``jax`` executor backend
+(:mod:`repro.core.engine`); its oracle is the scalar
+:func:`repro.core.cost.finish_cost` and its validation is the
+differential-parity suite in tests/test_backend_parity.py."""
 
 from .flash_attention import flash_attention
 from .fused_ffn import fused_swiglu

@@ -1,0 +1,179 @@
+"""Batched ``finish_cost`` arithmetic as jit-compiled jnp / Pallas kernels.
+
+The accelerator-resident half of the ``jax`` executor backend
+(:class:`repro.core.engine.JaxExecutor`): a whole GA generation's distinct
+``(structure, AcceleratorConfig)`` queries arrive as struct-of-arrays int64
+buffers and the capacity / streaming / weight-sharing arithmetic of
+:func:`repro.core.cost.finish_cost` runs as one device call.
+
+Bitwise parity with the scalar kernel is the contract (the engine's guards
+keep every lane below ``2**53`` / int64-product-safe, see
+:func:`repro.core.engine.needs_scalar_fallback`), which pins the numerics:
+
+* all integer work is int64 under ``jax.experimental.enable_x64`` (the
+  context manager keeps x64 scoped to these calls — the rest of the repo's
+  jax code stays in its default 32-bit world);
+* the streaming block count mirrors ``_stream_single_layer`` exactly:
+  ``ceil`` of a float64 true division, whose operands are exact below
+  ``2**53`` and whose IEEE result is therefore identical to the scalar
+  ``math.ceil(fp / glb)``.
+
+Batches are padded to the next power of two so GA generations of drifting
+size (cache warmth changes the miss count every round) reuse a handful of
+compiled kernels instead of recompiling per shape; the arithmetic is
+element-wise, so padding lanes can never perturb real lanes.
+
+Two interchangeable variants, both validated by the differential-parity
+suite (``tests/test_backend_parity.py``):
+
+* :func:`_finish_jnp` — the default: the whole arithmetic as one jitted
+  jnp expression.
+* :func:`_finish_pallas` — the hot streaming-block sweep
+  (``n_blocks`` / ``ema_w`` / capped footprint) as a Pallas kernel in the
+  idiom of the other kernels in this package (interpret mode off-TPU),
+  with the cheap mask algebra staying in jnp.  Selected by
+  ``JaxExecutor(pallas=True)`` or ``$REPRO_JAX_PALLAS=1``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+
+# Pallas grid tile for the streaming-block sweep; a power of two so the
+# pow2-padded batch is always an exact number of tiles
+_STREAM_BLOCK = 256
+
+
+def _finish_masks(fp, wr, w_total, single, glb, wbuf, shared,
+                  n_blocks):
+    """The mask algebra shared by both variants (pure jnp, element-wise).
+
+    Mirrors ``finish_cost``'s branch structure: buffer overflow splits into
+    infeasible (multi-node) vs streaming (single-node); separate-buffer
+    weight overflow only ever invalidates multi-node subgraphs.
+    """
+    wbuf_cap = jnp.where(shared, glb, wbuf)
+    overflow = jnp.where(shared, fp + wr > glb, fp > glb)
+    infeasible_buf = overflow & ~single
+    stream = overflow & single
+    ema_w = jnp.where(stream, wr * n_blocks, w_total)
+    fp_out = jnp.where(stream, jnp.minimum(fp, glb), fp)
+    w_overflow = ~shared & ~single & ~infeasible_buf & (wr > wbuf_cap)
+    feasible = ~(infeasible_buf | w_overflow)
+    return ema_w, fp_out, infeasible_buf, w_overflow, stream, feasible
+
+
+@jax.jit
+def _finish_jnp(fp, w_total, single, glb, wbuf, shared, share):
+    """Whole-batch ``finish_cost`` arithmetic as one jitted jnp expression."""
+    wr = w_total // share
+    # mirrors _stream_single_layer: math.ceil of a float64 true division
+    n_blocks = jnp.maximum(
+        jnp.ceil(fp / jnp.maximum(glb, 1)).astype(jnp.int64), 1)
+    (ema_w, fp_out, infeasible_buf, w_overflow, stream,
+     feasible) = _finish_masks(fp, wr, w_total, single, glb, wbuf, shared,
+                               n_blocks)
+    return (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow, stream,
+            feasible)
+
+
+def _stream_blocks_kernel(fp_ref, glb_ref, wr_ref,
+                          nb_ref, emaw_ref, fpcap_ref):
+    """Pallas kernel: one tile of the single-layer streaming-block sweep.
+
+    Computes, per lane: the row-block count (``ceil`` of the float64 true
+    division, exactly as ``_stream_single_layer``), the re-streamed weight
+    bytes ``wr * n_blocks``, and the buffer-capped footprint.  Whether a
+    lane actually streams is decided by the jnp mask algebra outside — the
+    kernel is pure arithmetic, so every lane computes unconditionally.
+    """
+    fp = fp_ref[...]
+    glb = glb_ref[...]
+    nb = jnp.maximum(jnp.ceil(fp / jnp.maximum(glb, 1)).astype(jnp.int64), 1)
+    nb_ref[...] = nb
+    emaw_ref[...] = wr_ref[...] * nb
+    fpcap_ref[...] = jnp.minimum(fp, glb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _finish_pallas(fp, w_total, single, glb, wbuf, shared, share,
+                   interpret=True):
+    """Variant routing the streaming-block sweep through the Pallas kernel."""
+    n = fp.shape[0]
+    block = min(_STREAM_BLOCK, n)  # both powers of two => exact tiling
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    wr = w_total // share
+    nb, emaw_stream, fp_cap = pl.pallas_call(
+        _stream_blocks_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=tuple(jax.ShapeDtypeStruct((n,), jnp.int64)
+                        for _ in range(3)),
+        interpret=interpret,
+    )(fp, glb, wr)
+    (ema_w, fp_out, infeasible_buf, w_overflow, stream,
+     feasible) = _finish_masks(fp, wr, w_total, single, glb, wbuf, shared,
+                               nb)
+    # the mask algebra re-selects from the kernel's unconditional results
+    ema_w = jnp.where(stream, emaw_stream, ema_w)
+    fp_out = jnp.where(stream, fp_cap, fp_out)
+    return (wr, nb, ema_w, fp_out, infeasible_buf, w_overflow, stream,
+            feasible)
+
+
+def _pad_pow2(arr: np.ndarray, fill) -> np.ndarray:
+    n = len(arr)
+    m = 1
+    while m < n:
+        m *= 2
+    if m == n:
+        return arr
+    out = np.full(m, fill, dtype=arr.dtype)
+    out[:n] = arr
+    return out
+
+
+def finish_cost_batch(fp, w_total, single, glb, wbuf, shared, share,
+                      use_pallas: bool = False) -> Tuple[np.ndarray, ...]:
+    """Evaluate a batch of ``finish_cost`` queries on the jax device.
+
+    Inputs are index-aligned equal-length arrays (int64 values, bool
+    masks); every lane must already satisfy the engine's scalar-fallback
+    guards.  Returns ``(wr, n_blocks, ema_w, fp_out, infeasible_buf,
+    w_overflow, stream, feasible)`` as NumPy arrays, bit-identical to the
+    scalar kernel and to :class:`repro.core.engine.VectorExecutor`.
+    """
+    n = len(fp)
+    if n == 0:
+        empty_i = np.zeros(0, dtype=np.int64)
+        empty_b = np.zeros(0, dtype=bool)
+        return (empty_i,) * 4 + (empty_b,) * 4
+    # pad to the next power of two: neutral lanes (glb/share=1 avoids any
+    # divide-by-zero path) that the element-wise arithmetic cannot couple
+    # into real lanes
+    args = (
+        _pad_pow2(np.asarray(fp, dtype=np.int64), 0),
+        _pad_pow2(np.asarray(w_total, dtype=np.int64), 0),
+        _pad_pow2(np.asarray(single, dtype=bool), False),
+        _pad_pow2(np.asarray(glb, dtype=np.int64), 1),
+        _pad_pow2(np.asarray(wbuf, dtype=np.int64), 1),
+        _pad_pow2(np.asarray(shared, dtype=bool), False),
+        _pad_pow2(np.asarray(share, dtype=np.int64), 1),
+    )
+    with enable_x64():
+        jargs = tuple(jnp.asarray(a) for a in args)
+        if use_pallas:
+            # interpret everywhere but real TPUs, like the other kernels
+            interpret = jax.default_backend() != "tpu"
+            outs = _finish_pallas(*jargs, interpret=interpret)
+        else:
+            outs = _finish_jnp(*jargs)
+        return tuple(np.asarray(o)[:n] for o in outs)

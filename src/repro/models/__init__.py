@@ -1,5 +1,31 @@
-from .config import BlockSpec, ModelConfig, reduced
-from .layers import Param, is_param, param_axes, param_values, tree_cast
-from .lm import cache_axes, encdec_apply, init_caches, lm_apply, lm_init, lm_loss
+"""Model zoo: jax-free architecture configs + jax-backed layers/LMs.
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+``repro.models.config`` is pure dataclasses and is what the workload
+resolver's ``tpu:`` scheme (via ``repro.core.tpu_adapter`` and
+``repro.configs``) needs; the layer/LM names are lazy module attributes so
+that resolving a ``tpu:`` workload — and the whole explore/evaluate path —
+never pays, or depends on, the jax import.
+"""
+
+from .config import BlockSpec, ModelConfig, reduced
+
+_LAYERS_EXPORTS = ("Param", "is_param", "param_axes", "param_values",
+                   "tree_cast")
+_LM_EXPORTS = ("cache_axes", "encdec_apply", "init_caches", "lm_apply",
+               "lm_init", "lm_loss")
+
+
+def __getattr__(name):
+    if name in _LAYERS_EXPORTS:
+        from . import layers
+
+        return getattr(layers, name)
+    if name in _LM_EXPORTS:
+        from . import lm
+
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["BlockSpec", "ModelConfig", "reduced",
+           *_LAYERS_EXPORTS, *_LM_EXPORTS]

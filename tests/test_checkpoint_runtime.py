@@ -3,9 +3,12 @@
 import os
 import shutil
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import (
     CheckpointConfig,

@@ -83,6 +83,50 @@ def test_bad_arguments_exit_nonzero():
         main(["explore", "--workload", "vgg16", "--opt", "population"])
 
 
+def test_unknown_eval_backend_exits_2_and_lists_backends(capsys):
+    from repro.core.engine import BACKENDS
+
+    rc = main(["explore", "--workload", "vgg16", "--strategy", "greedy",
+               "--budget", "100", "--eval-backend", "bogus"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "unknown eval backend 'bogus'" in err
+    for backend in BACKENDS:
+        assert backend in err
+
+
+def test_unavailable_jax_backend_exits_2_with_why(capsys, monkeypatch):
+    """When jax is not importable the CLI reports the import failure and
+    how to fix it, instead of a traceback."""
+    import repro.core.engine as engine
+
+    monkeypatch.setattr(engine, "_JAX_STATUS",
+                        (False, "ModuleNotFoundError: No module named 'jax'"))
+    rc = main(["explore", "--workload", "vgg16", "--strategy", "greedy",
+               "--budget", "100", "--eval-backend", "jax"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "'jax' is unavailable" in err
+    assert "No module named 'jax'" in err
+    assert "pip install jax" in err
+
+
+def test_explore_eval_backend_jax_matches_serial(tmp_path, capsys):
+    from backend_parity import available_backends
+
+    if ("jax", 1) not in available_backends():
+        pytest.skip("jax not installed")
+    serial_out = tmp_path / "serial.json"
+    jax_out = tmp_path / "jax.json"
+    base = ["explore", "--workload", "vgg16", "--strategy", "ga",
+            "--budget", "200", "--opt", "population=10"]
+    assert main(base + ["--out", str(serial_out)]) == 0
+    assert main(base + ["--eval-backend", "jax",
+                        "--out", str(jax_out)]) == 0
+    capsys.readouterr()
+    assert jax_out.read_text() == serial_out.read_text()
+
+
 def test_module_entrypoint_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = (str(REPO_ROOT / "src")

@@ -1,5 +1,9 @@
 """Gradient compression: error feedback keeps the long-run average unbiased."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np

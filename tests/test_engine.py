@@ -5,6 +5,7 @@ import random
 from dataclasses import asdict, replace
 
 import pytest
+from backend_parity import available_backends, backend_params
 from conftest import small_graph
 
 from repro.api import ExploreSpec, GAOptions, SAOptions, run
@@ -22,7 +23,15 @@ from repro.core import (
     split_to_fit,
     split_to_fit_batch,
 )
-from repro.core.engine import ProcessExecutor, SerialExecutor, VectorExecutor
+from repro.core.cost import SubgraphStructure
+from repro.core.engine import (
+    BACKENDS,
+    ProcessExecutor,
+    SerialExecutor,
+    VectorExecutor,
+    backend_status,
+    needs_scalar_fallback,
+)
 from repro.core.netlib import build
 
 KB = 1 << 10
@@ -174,11 +183,93 @@ def test_make_executor_resolution():
         make_executor("gpu", 1)
 
 
+def test_make_executor_unknown_backend_lists_valid_backends():
+    with pytest.raises(ValueError) as exc:
+        make_executor("gpu", 1)
+    for backend in BACKENDS:
+        assert backend in str(exc.value)
+
+
+def test_backend_status_reports_why_unavailable(monkeypatch):
+    import repro.core.engine as engine
+
+    ok, why = backend_status("bogus")
+    assert not ok and "valid backends" in why
+    # simulate a missing jax install regardless of this container
+    monkeypatch.setattr(engine, "_JAX_STATUS",
+                        (False, "ModuleNotFoundError: No module named 'jax'"))
+    ok, why = backend_status("jax")
+    assert not ok
+    assert "No module named 'jax'" in why and "pip install jax" in why
+    with pytest.raises(ValueError, match="unavailable"):
+        make_executor("jax", 1)
+
+
+# ---------------------------------------------------------------------------
+# scalar-fallback guard boundaries (pinned exactly for vector and jax)
+# ---------------------------------------------------------------------------
+
+def test_fallback_guard_boundary_capacity_2_53():
+    """Capacities become unsafe for float64 division at exactly 2**53."""
+    st = SubgraphStructure(nodes=(0,), footprint=10 * KB, weight_total=KB)
+    wbuf = 144 * KB
+    edge = 1 << 53
+    assert not needs_scalar_fallback(
+        st, AcceleratorConfig(glb_bytes=edge - 1, wbuf_bytes=wbuf))
+    assert needs_scalar_fallback(
+        st, AcceleratorConfig(glb_bytes=edge, wbuf_bytes=wbuf))
+    assert needs_scalar_fallback(
+        st, AcceleratorConfig(glb_bytes=edge + 1, wbuf_bytes=wbuf))
+    # the wbuf capacity is guarded identically
+    assert needs_scalar_fallback(
+        st, AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=edge))
+
+
+def test_fallback_guard_boundary_sizes_2_31():
+    """Footprint / total weights above 2**31 could overflow the int64
+    block-count product, so they fall back at exactly 2**31."""
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    edge = 1 << 31
+    ok = SubgraphStructure(nodes=(0,), footprint=edge - 1,
+                           weight_total=edge - 1)
+    assert not needs_scalar_fallback(ok, acc)
+    assert needs_scalar_fallback(replace(ok, footprint=edge), acc)
+    assert needs_scalar_fallback(replace(ok, weight_total=edge), acc)
+    # schedule failures always take the scalar path (reason strings)
+    assert needs_scalar_fallback(replace(ok, sched_error="no schedule"), acc)
+
+
+@pytest.mark.parametrize("backend,jobs", backend_params())
+def test_fallback_boundary_queries_stay_bitwise_exact(backend, jobs):
+    """Batched backends answer guard-straddling queries identically to the
+    scalar kernel (the fallback partition is an implementation detail)."""
+    g = small_graph()
+    edge_accs = [
+        AcceleratorConfig(glb_bytes=(1 << 53) - 1, wbuf_bytes=144 * KB),
+        AcceleratorConfig(glb_bytes=(1 << 53), wbuf_bytes=144 * KB),
+        AcceleratorConfig(glb_bytes=(1 << 53) + 1, wbuf_bytes=144 * KB),
+        AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=(1 << 53)),
+        AcceleratorConfig(glb_bytes=2 * KB, wbuf_bytes=2 * KB),
+    ]
+    queries = [(frozenset({v}), acc) for v in range(g.n)
+               for acc in edge_accs]
+    queries += [(frozenset({v, v + 1}), acc) for v in range(g.n - 1)
+                for acc in edge_accs]
+    ex = make_executor(backend, jobs)
+    kernel = CostKernel(g)
+    try:
+        got = ex.evaluate(CostKernel(g), queries)
+    finally:
+        ex.close()
+    for (nodes, acc), a in zip(queries, got):
+        assert asdict(a) == asdict(kernel.cost(nodes, acc)), (nodes, acc)
+
+
 # ---------------------------------------------------------------------------
 # backend invariance of whole strategy runs
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend,jobs", [("process", 2), ("vector", 1)])
+@pytest.mark.parametrize("backend,jobs", backend_params())
 def test_parallel_ga_bitwise_identical_to_serial(backend, jobs):
     spec = fixed_spec()
     serial = run(spec, graph=small_graph())
@@ -198,18 +289,20 @@ def test_parallel_sa_and_enum_identical_to_serial():
 def test_count_run_distinct_queries_invariant_across_backends():
     spec = fixed_spec()
     counts = {}
-    for backend, jobs in (("serial", 1), ("process", 2), ("vector", 1)):
+    for backend, jobs in available_backends():
         res = run(spec, graph=small_graph(), eval_backend=backend,
                   eval_jobs=jobs)
         counts[backend] = res.evaluations
+    assert len(counts) >= 3  # serial + process + vector always resolve
     assert len(set(counts.values())) == 1, counts
+
 
 def test_search_result_evaluations_invariant_across_backends():
     """run_ga's raw SearchResult.evaluations (true cache misses), not just
     the distinct-query count run() reports, must not depend on the backend."""
     from repro.core import run_ga
     counts = []
-    for backend, jobs in (("serial", 1), ("process", 2), ("vector", 1)):
+    for backend, jobs in available_backends():
         g = small_graph()
         ev = CachedEvaluator(g, executor=make_executor(backend, jobs))
         res = run_ga(g, Objective(metric="ema", alpha=None), HWSpace(),

@@ -1,7 +1,11 @@
 """Golden regression: seed-fixed GA/greedy results for one workload per URI
-scheme, pinned bitwise and asserted identical across the ``serial`` /
-``vector`` / ``process`` evaluation backends (the same invariance
-`tests/test_engine.py` pins for the engine itself).
+scheme, pinned bitwise and asserted identical across every evaluation
+backend that resolves (``serial`` / ``vector`` / ``process`` / ``jax`` —
+the same invariance `tests/test_engine.py` pins for the engine itself; an
+uninstalled jax shows up as a *skip*, not a hole).
+
+The ``ga_full`` case is FULL-budget-shaped: a paper-scale GA population so
+the batched backends see generation-sized miss batches, not toy ones.
 
 Golden artifacts live in ``tests/golden/``; regenerate them after an
 *intentional* cost-model or search change with::
@@ -13,6 +17,7 @@ import json
 from pathlib import Path
 
 import pytest
+from backend_parity import backend_params
 
 from repro.api import ExploreSpec, GAOptions, GreedyOptions, run
 from repro.core import AcceleratorConfig, HWSpace, Objective
@@ -31,24 +36,30 @@ WORKLOADS = {
     "file_diamond": f"file:{FILE_GRAPH}",
 }
 
-STRATEGY_OPTIONS = {
-    "ga": GAOptions(population=10),
-    "greedy": GreedyOptions(eval_budget=2_000),
+# case key -> (strategy, options, sample_budget).  ``ga_full`` mirrors the
+# paper's generation shape (population 64, 20 generations) so the batched
+# executors are pinned on generation-sized miss batches too.
+STRATEGIES = {
+    "ga": ("ga", GAOptions(population=10), 300),
+    "greedy": ("greedy", GreedyOptions(eval_budget=2_000), 300),
+    "ga_full": ("ga", GAOptions(population=64), 1_280),
 }
 
-CASES = [(w, s) for w in WORKLOADS for s in STRATEGY_OPTIONS]
+CASES = [(w, s) for w in WORKLOADS for s in ("ga", "greedy")]
+CASES += [("synthetic_layered24", "ga_full")]
 
 
-def golden_spec(workload_key: str, strategy: str) -> ExploreSpec:
+def golden_spec(workload_key: str, strategy_key: str) -> ExploreSpec:
     acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    strategy, options, budget = STRATEGIES[strategy_key]
     return ExploreSpec(
         workload=WORKLOADS[workload_key],
         strategy=strategy,
         objective=Objective(metric="ema", alpha=None),
         hw=HWSpace(mode="fixed", base=acc),
-        sample_budget=300,
+        sample_budget=budget,
         seed=0,
-        options=STRATEGY_OPTIONS[strategy],
+        options=options,
     )
 
 
@@ -70,20 +81,20 @@ def golden_path(workload_key: str, strategy: str) -> Path:
     return GOLDEN_DIR / f"{workload_key}.{strategy}.json"
 
 
+@pytest.mark.parametrize("backend,jobs", backend_params(include_serial=True))
 @pytest.mark.parametrize("workload_key,strategy", CASES)
-def test_golden_result_pinned_across_backends(workload_key, strategy):
+def test_golden_result_pinned_across_backends(workload_key, strategy,
+                                              backend, jobs):
     spec = golden_spec(workload_key, strategy)
     golden = json.loads(golden_path(workload_key, strategy).read_text())
 
-    serial = canonical_dict(run(spec))
-    assert serial == golden, (
-        f"{workload_key}/{strategy} drifted from tests/golden/ — if the "
-        f"cost model or search changed intentionally, regenerate with "
-        f"`PYTHONPATH=src python tests/test_golden_workloads.py --regen`")
-    # backend invariance: vector and process compute the identical artifact
-    for backend, jobs in (("vector", 1), ("process", 2)):
-        got = canonical_dict(run(spec, eval_backend=backend, eval_jobs=jobs))
-        assert got == golden, f"{backend} backend diverged from golden"
+    got = canonical_dict(run(spec, eval_backend=backend, eval_jobs=jobs))
+    assert got == golden, (
+        f"{workload_key}/{strategy} [{backend}] drifted from tests/golden/ "
+        f"— if the cost model or search changed intentionally, regenerate "
+        f"with `PYTHONPATH=src python tests/test_golden_workloads.py "
+        f"--regen`; if only this backend drifted, its arithmetic broke "
+        f"bitwise parity")
 
 
 def test_checked_in_file_workload_is_valid_graph_json():

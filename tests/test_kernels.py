@@ -4,10 +4,13 @@ Per deliverable (c): sweep shapes/dtypes per kernel and assert_allclose
 against ref.py, plus hypothesis property tests.
 """
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import flash_attention, fused_rmsnorm, fused_swiglu

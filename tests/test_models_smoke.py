@@ -1,10 +1,13 @@
 """Per-arch smoke tests: reduced config, one forward + one train step on CPU,
 asserting output shapes and no NaNs (deliverable f)."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, get_config
 from repro.models import (

@@ -1,10 +1,13 @@
 """Roofline machinery: HLO collective parsing, XLA scan-once behaviour
 (the documented basis for the trip-count correction), report math."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.launch import roofline

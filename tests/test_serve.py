@@ -1,9 +1,12 @@
 """Serving engine: batched generation consistency + whisper enc-dec."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import init_caches, lm_apply, lm_init, param_values

@@ -1,9 +1,12 @@
 """Logical-axis sharding rules + mesh planning (single process, no devices
 locked — specs only; multi-device execution covered by test_multidevice)."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as PS
 
 from repro.configs import get_config

@@ -1,6 +1,10 @@
 """The deferred-weight-gradient sLSTM custom VJP must match jax AD of the
 plain scan exactly (the §Perf fix that removes the per-timestep all-reduce)."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,8 +1,11 @@
 """End-to-end behaviour tests for the paper's system."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import numpy as np
-import pytest
 
 from repro.api import ExploreSpec, GAOptions, run
 from repro.configs import ARCHS, SHAPES, get_config

@@ -1,9 +1,12 @@
 """Optimizer, train step, microbatching, data pipeline."""
 
+import pytest
+
+pytest.importorskip("jax")  # optional dep: skip whole module when absent
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data import DataConfig, PrefetchingLoader, SyntheticLM
