@@ -12,6 +12,13 @@ Emits ``engine.<workload>.<backend>.b<batch>,us,x<speedup>`` rows where
 also pays any jit compilation) and the derived column is the speedup over
 the serial scalar loop.  The jax rows are skipped — with a note, not an
 error — when jax is not installed.
+
+The ``structure.*`` rows cover the other half: a cold kernel deriving a
+GA-shaped corpus of distinct node sets, with the canonical content-
+fingerprint memo off vs on (``REPRO_STRUCT_CANON`` / ``CostKernel
+(canonical=...)``).  The derived column reports derivations/canonical
+hits, and the ``canon_on`` row's speedup is the structure-half win the
+memo buys on that workload.
 """
 
 from __future__ import annotations
@@ -56,9 +63,48 @@ def _time_batch(ex, kernel, queries) -> float:
     return best
 
 
+def _node_corpus(g, n_parts: int):
+    """Distinct node sets from GA-shaped random partitions (the repeated
+    isomorphic shapes are the canonical memo's target)."""
+    rng = random.Random(7)
+    seen, out = set(), []
+    for _ in range(n_parts):
+        for s in random_partition(g, rng, mean_size=rng.uniform(1.5, 6.0)):
+            fs = frozenset(s)
+            if fs not in seen:
+                seen.add(fs)
+                out.append(fs)
+    return out
+
+
+def bench_structures() -> None:
+    """Cold-kernel structure derivation, canonical memo off vs on."""
+    n_parts = 48 if FULL else 16
+    for wname, uri in WORKLOADS:
+        g = build_workload(uri)
+        sets = _node_corpus(g, n_parts)
+        base_us = None
+        for label, canonical in (("off", False), ("on", True)):
+            best, counts = float("inf"), ""
+            for _ in range(REPEATS):
+                kernel = CostKernel(g, canonical=canonical)
+                t0 = time.time()
+                for fs in sets:
+                    kernel.structure(fs)
+                best = min(best, (time.time() - t0) * 1e6)
+                counts = (f"{kernel.structure_misses}derive/"
+                          f"{kernel.structure_canon_hits}hit")
+            if label == "off":
+                base_us = best
+            speedup = base_us / best if base_us else 1.0
+            emit(f"structure.{wname}.canon_{label}.s{len(sets)}", best,
+                 f"x{speedup:.2f},{counts}")
+
+
 def main() -> None:
     from repro.core.engine import backend_status
 
+    bench_structures()
     for wname, uri in WORKLOADS:
         g = build_workload(uri)
         for n in BATCHES:

@@ -41,6 +41,13 @@ bit-identical results, so they are pure runtime knobs (``jax`` batches
 whole GA generations onto the accelerator and needs the optional jax
 dependency).
 
+``explore --profile`` prints where the search spent its time (wall vs
+``derive_schedule`` seconds) and the structure-cache counters (raw /
+canonical / disk hits vs misses).  ``--struct-cache-dir`` (or
+``$REPRO_STRUCT_CACHE_DIR``) adds a disk-backed warm cache of canonical
+subgraph structures shared across runs and worker processes — gated like
+the result store: unset means no filesystem traffic.
+
 Examples::
 
     python -m repro explore --workload resnet50 --strategy ga \
@@ -193,17 +200,43 @@ def _print_table(rows: List[Dict[str, str]]) -> None:
         print("  ".join(r[c].ljust(widths[c]) for c in cols))
 
 
+def _print_profile(res: ExploreResult) -> None:
+    prof = res.meta.get("profile")
+    if prof is None:
+        print("  profile: store hit — no search ran")
+        return
+    wall = prof.get("wall_s", 0.0)
+    derive = prof.get("structure_derive_s", 0.0)
+    pct = 100.0 * derive / wall if wall > 0 else 0.0
+    canon = "on" if prof.get("canonical") else "off"
+    print(f"  profile: wall {wall:.2f}s, derive_schedule {derive:.2f}s "
+          f"({pct:.0f}% of wall) over {prof.get('structure_misses', 0)} "
+          f"structure misses (canonical memo {canon})")
+    disk = ""
+    if "structure_disk_writes" in prof:
+        disk = (f", {prof.get('structure_disk_hits', 0)} disk hits / "
+                f"{prof['structure_disk_writes']} writes")
+    print(f"           structure hits: "
+          f"{prof.get('structure_raw_hits', 0)} raw, "
+          f"{prof.get('structure_canon_hits', 0)} canonical{disk}; "
+          f"{prof.get('evaluations', 0)} cost evals / "
+          f"{prof.get('lookups', 0)} lookups")
+
+
 def cmd_explore(args: argparse.Namespace) -> int:
     spec = _spec_from_args(args)
     _maybe_save(args.save_spec, spec.to_json(indent=2))
     store = _store_from_args(args)
     res = run(spec, store=store, eval_backend=args.eval_backend,
-              eval_jobs=args.eval_jobs)
+              eval_jobs=args.eval_jobs, profile=args.profile,
+              struct_cache_dir=args.struct_cache_dir)
     print(res.summary())
     if res.history:
         print(f"  converged: cost {res.history[0][1]:.4g} -> "
               f"{res.history[-1][1]:.4g} over {res.samples} samples "
               f"({res.evaluations} cost-model evals)")
+    if args.profile:
+        _print_profile(res)
     if store is not None:
         print(f"  {store.stats()}")
     _maybe_save(args.out, res.to_json(indent=2))
@@ -221,7 +254,8 @@ def cmd_compare(args: argparse.Namespace) -> int:
     store = _store_from_args(args)
     results = compare(spec, names, jobs=args.jobs, store=store,
                       eval_backend=args.eval_backend,
-                      eval_jobs=args.eval_jobs)
+                      eval_jobs=args.eval_jobs,
+                      struct_cache_dir=args.struct_cache_dir)
     ranked = sorted(results, key=lambda r: r.cost)
     _print_table([_result_row(r) for r in ranked])
     best = ranked[0]
@@ -359,7 +393,8 @@ def cmd_trace(args: argparse.Namespace) -> int:
         spec = _spec_from_args(args)
         store = _store_from_args(args)
         res = run(spec, store=store, eval_backend=args.eval_backend,
-                  eval_jobs=args.eval_jobs)
+                  eval_jobs=args.eval_jobs,
+                  struct_cache_dir=args.struct_cache_dir)
         workload, strategy = spec.workload, spec.strategy
         seed, out_tile = spec.seed, spec.out_tile
     if not res.groups or res.plan is None:
@@ -597,6 +632,11 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                         "vector | jax (default: process when --eval-jobs "
                         "> 1, else serial; jax needs the optional jax "
                         "dependency and is checked up front)")
+    p.add_argument("--struct-cache-dir", metavar="DIR", default=None,
+                   help="disk-backed warm cache for canonical subgraph "
+                        "structures, shared across runs and worker "
+                        "processes (default: $REPRO_STRUCT_CACHE_DIR if "
+                        "set; unset means no filesystem traffic)")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -609,6 +649,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_spec_args(pe)
     pe.add_argument("--out", metavar="PATH",
                     help="write the ExploreResult JSON here")
+    pe.add_argument("--profile", action="store_true",
+                    help="print a search profile: wall time, "
+                         "derive_schedule seconds, and structure-cache "
+                         "hit/miss counters (raw / canonical / disk)")
     pe.set_defaults(fn=cmd_explore)
 
     pc = sub.add_parser("compare",

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import contextvars
 import math
+import os
+import time
 from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import replace
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
@@ -64,18 +66,48 @@ def active_store() -> Optional[ResultStore]:
 
 
 def _make_evaluator(g: Graph, out_tile: int, eval_backend: Optional[str],
-                    eval_jobs: int) -> CachedEvaluator:
-    """Build an evaluator whose executor matches the requested backend."""
+                    eval_jobs: int,
+                    struct_cache_dir: Optional[str] = None) -> CachedEvaluator:
+    """Build an evaluator whose executor matches the requested backend.
+
+    ``struct_cache_dir`` (or ``$REPRO_STRUCT_CACHE_DIR``) attaches a
+    disk-backed :class:`~repro.core.structcache.StructureCache` as the warm
+    tier behind the in-memory canonical structure memo; unset means no
+    filesystem traffic, exactly like the result store.
+    """
     from repro.core.engine import make_executor
 
+    cache_dir = struct_cache_dir or os.environ.get("REPRO_STRUCT_CACHE_DIR")
+    struct_cache = None
+    if cache_dir:
+        from repro.core.structcache import StructureCache
+
+        struct_cache = StructureCache(cache_dir)
     return CachedEvaluator(g, out_tile=out_tile,
-                           executor=make_executor(eval_backend, eval_jobs))
+                           executor=make_executor(eval_backend, eval_jobs),
+                           struct_cache=struct_cache)
+
+
+def _counters_delta(before: Dict[str, object],
+                    after: Dict[str, object]) -> Dict[str, object]:
+    """Numeric counter deltas (so a shared evaluator's prior activity does
+    not leak into one run's profile); non-numeric fields pass through."""
+    out: Dict[str, object] = {}
+    for k, v in after.items():
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            out[k] = v
+        else:
+            b = before.get(k, 0)
+            out[k] = v - b if isinstance(b, (int, float)) else v
+    return out
 
 
 def run(spec: ExploreSpec, graph: Optional[Graph] = None,
         ev: Optional[CachedEvaluator] = None,
         store: Optional[ResultStore] = None,
         eval_backend: Optional[str] = None, eval_jobs: int = 1,
+        profile: bool = False,
+        struct_cache_dir: Optional[str] = None,
         **runtime) -> ExploreResult:
     """Run ``spec.strategy`` on ``spec`` and return an :class:`ExploreResult`.
 
@@ -100,6 +132,16 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
     ``result.evaluations`` is set here, uniformly for every strategy, to the
     number of *distinct* (subgraph, hardware-point) cost-model queries the
     strategy issued — see :class:`ExploreResult` for the exact semantics.
+
+    ``profile=True`` attaches ``result.meta["profile"]``: the search's wall
+    time plus the evaluator counter deltas it caused
+    (:meth:`CachedEvaluator.counters` — structure raw/canonical/disk hits,
+    misses, and ``derive_schedule`` seconds).  The profile is attached
+    *after* the store write, so stored artifacts never embed timings and
+    stay byte-stable across machines; a store hit returns the cached
+    artifact without a profile (no search ran).  ``struct_cache_dir``
+    (default ``$REPRO_STRUCT_CACHE_DIR``) adds a disk-backed warm tier for
+    canonical structures when ``run`` builds the evaluator.
     """
     from .workloads import workload_is_stable
 
@@ -122,7 +164,8 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
     g = graph if graph is not None else build_workload(spec.workload)
     created_ev = ev is None
     if created_ev:
-        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs)
+        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs,
+                             struct_cache_dir)
     entry = get_strategy(spec.strategy)
     options = spec.options
     if options is None and entry.options_cls is not None:
@@ -134,6 +177,8 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             f"{entry.options_cls.__name__}, got {type(options).__name__}"
         )
     token = _ACTIVE_STORE.set(store if use_store else None)
+    counters_before = ev.counters() if profile else None
+    t_start = time.perf_counter() if profile else 0.0
     try:
         with ev.count_run() as touched:
             result = entry.fn(spec, options, g, ev, **runtime)
@@ -141,12 +186,17 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
         _ACTIVE_STORE.reset(token)
         if created_ev:
             ev.close()  # release executor pools; the cache dies with ev
+    wall_s = time.perf_counter() - t_start
     result.evaluations = len(touched)
     result.spec = spec
     result.meta.setdefault("graph", g.name)
     result.meta.setdefault("graph_sha", graph_fingerprint(g))
     if use_store:
         store.put(spec, result)
+    if profile:
+        prof = _counters_delta(counters_before, ev.counters())
+        prof["wall_s"] = wall_s
+        result.meta["profile"] = prof
     return result
 
 
@@ -178,7 +228,8 @@ def compare(spec: ExploreSpec,
             jobs: int = 1,
             store: Optional[ResultStore] = None,
             eval_backend: Optional[str] = None,
-            eval_jobs: int = 1) -> List[ExploreResult]:
+            eval_jobs: int = 1,
+            struct_cache_dir: Optional[str] = None) -> List[ExploreResult]:
     """Run several strategies on one spec, sharing a single evaluator cache.
 
     ``strategies`` items are strategy names (run with their default options,
@@ -206,15 +257,24 @@ def compare(spec: ExploreSpec,
     out whole strategies).  They configure the shared evaluator on the
     serial path; with ``jobs > 1`` each worker keeps the default serial
     executor — nesting process pools inside workers oversubscribes cores.
+
+    ``struct_cache_dir`` (default ``$REPRO_STRUCT_CACHE_DIR``) attaches the
+    disk-backed canonical structure cache; with ``jobs > 1`` each worker
+    opens the same directory (writes are atomic, so sharing is safe) and
+    additionally ships its in-memory canonical entries back on join
+    (:meth:`CachedEvaluator.merge_structures`), mirroring the cost-memo
+    merge.
     """
     subs = _resolve_compare_specs(spec, strategies)
     g = graph if graph is not None else build_workload(spec.workload)
     created_ev = ev is None
     if created_ev:
-        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs)
+        ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs,
+                             struct_cache_dir)
     try:
         if jobs and jobs > 1 and len(subs) > 1:
-            return _compare_parallel(subs, g, ev, jobs, store)
+            return _compare_parallel(subs, g, ev, jobs, store,
+                                     struct_cache_dir)
         return [run(sub, graph=g, ev=ev, store=store) for sub in subs]
     finally:
         if created_ev:
@@ -223,24 +283,28 @@ def compare(spec: ExploreSpec,
 
 def _compare_worker(
     spec_json: str, graph: Optional[Graph], store_dir: Optional[str],
-) -> Tuple[ExploreResult, Dict[Tuple, SubgraphCost]]:
+    struct_cache_dir: Optional[str] = None,
+) -> Tuple[ExploreResult, Dict[Tuple, SubgraphCost], Dict[Tuple, object]]:
     """Top-level (picklable) worker: run one spec on a cold evaluator.
 
-    Returns the result plus the worker evaluator's memo table so the parent
-    can merge it (``CachedEvaluator.merge_cache``) and later serial runs
-    still benefit from the work done in workers.
+    Returns the result plus the worker evaluator's memo table and its
+    canonical structure table, so the parent can merge both
+    (``CachedEvaluator.merge_cache`` / ``merge_structures``) and later
+    serial runs still benefit from the work done in workers.
     """
     spec = ExploreSpec.from_json(spec_json)
     g = graph if graph is not None else build_workload(spec.workload)
-    ev = CachedEvaluator(g, out_tile=spec.out_tile)
+    ev = _make_evaluator(g, spec.out_tile, None, 1, struct_cache_dir)
     worker_store = ResultStore(store_dir) if store_dir else None
     result = run(spec, graph=g, ev=ev, store=worker_store)
-    return result, ev.cache_snapshot()
+    return result, ev.cache_snapshot(), ev.structure_snapshot()
 
 
 def _compare_parallel(subs: List[ExploreSpec], g: Graph,
                       ev: CachedEvaluator, jobs: int,
-                      store: Optional[ResultStore]) -> List[ExploreResult]:
+                      store: Optional[ResultStore],
+                      struct_cache_dir: Optional[str] = None,
+                      ) -> List[ExploreResult]:
     results: List[Optional[ExploreResult]] = [None] * len(subs)
     pending = list(range(len(subs)))
     if store is not None:
@@ -271,13 +335,15 @@ def _compare_parallel(subs: List[ExploreSpec], g: Graph,
         with ProcessPoolExecutor(
                 max_workers=min(jobs, len(unique))) as pool:
             futures = {
-                pool.submit(_compare_worker, subs[i].to_json(), g, store_dir):
+                pool.submit(_compare_worker, subs[i].to_json(), g, store_dir,
+                            struct_cache_dir):
                 i for i in unique
             }
             for fut in as_completed(futures):
-                result, cache = fut.result()
+                result, cache, structs = fut.result()
                 results[futures[fut]] = result
                 ev.merge_cache(cache)
+                ev.merge_structures(structs)
     for i, j in duplicates.items():
         results[i] = results[j]
     return [r for r in results if r is not None]

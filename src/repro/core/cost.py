@@ -24,9 +24,21 @@ ARM-memory-compiler-style sqrt model) + MAC energy.
 from __future__ import annotations
 
 import math
+import os
+import time
 from contextlib import contextmanager
-from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, field, replace as dataclass_replace
+from typing import (
+    Any,
+    Dict,
+    Iterator,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Set,
+    Tuple,
+)
 
 from .graph import FULL, Graph
 from .memory import subgraph_footprint
@@ -439,30 +451,174 @@ def _stream_single_layer(sc: SubgraphCost, glb_cap: int) -> None:
     sc.reason = f"{STREAM_REASON} in {n_blocks} blocks"
 
 
+# canonical memoization default: on everywhere, disabled only for honest
+# before/after measurement (REPRO_STRUCT_CANON=0)
+_CANON_ENV = "REPRO_STRUCT_CANON"
+
+
+def canonical_structure_key(g: Graph, nodes: Set[int],
+                            out_tile: int = 1) -> Tuple:
+    """Content fingerprint of a subgraph query (hashable, label-free).
+
+    Two node sets map to the same key iff relabeling each set's nodes by
+    ascending index (internal nodes to ``0..k-1``, external producers to
+    ``0..m-1``) yields identical structures over every field
+    :func:`compute_structure` reads:
+
+    * per internal node, in sorted-index order:
+      ``(out_len, line_bytes, weight_bytes, macs, writes_out)`` where
+      ``writes_out`` folds ``is_output`` with "has a consumer outside the
+      set" (their union is what feeds ``ema_out``);
+    * internal edges as ``(src', dst', F, s, kind)`` with relabeled
+      endpoints, sorted;
+    * per external producer, in sorted-index order:
+      ``(out_len, line_bytes)`` (what ``ema_in``/footprint read);
+    * external in-edges as ``(producer', dst', F, s, kind)``, sorted;
+    * ``out_tile``.
+
+    Sorted-index relabeling is order-preserving, and every stage of
+    :func:`~repro.core.tiling.derive_schedule` is a well-founded recursion
+    on consumers (stage 2) or a unique co-prime rate solution (stage 3), so
+    equal keys imply field-for-field equal structures up to the ``nodes``
+    tuple — the property the canonical memo in :class:`CostKernel` relies
+    on and ``tests/test_canonical_structure.py`` fuzzes.  The one
+    label-*dependent* output, a ``sched_error`` message (it embeds concrete
+    node indices), is excluded from canonical caching by the kernel.
+    """
+    ntuple = tuple(sorted(nodes))
+    nset = set(ntuple)
+    rel = {v: i for i, v in enumerate(ntuple)}
+    node_sig: List[Tuple] = []
+    int_edges: List[Tuple] = []
+    ext_cons: Dict[int, List[Tuple]] = {}
+    for v in ntuple:
+        nd = g.nodes[v]
+        writes_out = nd.is_output
+        if not writes_out:
+            for e in g.out_edges(v):
+                if e.dst not in nset:
+                    writes_out = True
+                    break
+        node_sig.append((nd.out_len, nd.line_bytes, nd.weight_bytes,
+                         nd.macs, writes_out))
+        for e in g.in_edges(v):
+            if e.src in nset:
+                int_edges.append((rel[e.src], rel[v], e.F, e.s, e.kind))
+            else:
+                ext_cons.setdefault(e.src, []).append(
+                    (rel[v], e.F, e.s, e.kind))
+    ext_sig: List[Tuple] = []
+    ext_edges: List[Tuple] = []
+    for j, p in enumerate(sorted(ext_cons)):
+        nd = g.nodes[p]
+        ext_sig.append((nd.out_len, nd.line_bytes))
+        for tail in sorted(ext_cons[p]):
+            ext_edges.append((j,) + tail)
+    int_edges.sort()
+    return (out_tile, tuple(node_sig), tuple(int_edges),
+            tuple(ext_sig), tuple(ext_edges))
+
+
 class CostKernel:
-    """The pure evaluation kernel: graph + out_tile + a structure memo.
+    """The pure evaluation kernel: graph + out_tile + a tiered structure memo.
 
     ``cost(nodes, acc)`` is a deterministic, side-effect-free function of
     its arguments; the only state here is memoization of
     :func:`compute_structure` (itself pure), shared by every executor
     backend.  Worker processes hold their own ``CostKernel`` and stay warm
     across batches.
+
+    The memo has up to three tiers, consulted in order:
+
+    1. **raw** — exact ``frozenset(nodes)`` key (the original memo);
+    2. **canonical** — :func:`canonical_structure_key` content fingerprint,
+       so isomorphic subgraphs (the repeated blocks of ``tpu:``/``netlib:``
+       models, GA mutation motifs) share one ``derive_schedule`` call.  A
+       canonical hit re-stamps ``SubgraphStructure.nodes`` with the query's
+       own tuple, so results stay bitwise-identical to per-node-set
+       evaluation.  Structures with a ``sched_error`` are cached *only* by
+       raw key — the error message embeds concrete node indices;
+    3. **disk** (optional) — a :class:`~repro.core.structcache.
+       StructureCache` warming the canonical tier across processes and
+       runs, gated like the result store.
+
+    Canonical memoization is on by default; set ``REPRO_STRUCT_CANON=0``
+    (or ``canonical=False``) to disable it for before/after measurement.
     """
 
-    def __init__(self, g: Graph, out_tile: int = 1) -> None:
+    def __init__(self, g: Graph, out_tile: int = 1,
+                 canonical: Optional[bool] = None,
+                 struct_cache: Optional[Any] = None) -> None:
         self.g = g
         self.out_tile = out_tile
+        if canonical is None:
+            canonical = os.environ.get(_CANON_ENV, "1") != "0"
+        self.canonical = bool(canonical)
+        self.struct_cache = struct_cache
         self._structures: Dict[frozenset, SubgraphStructure] = {}
+        self._canon: Dict[Tuple, SubgraphStructure] = {}
+        # profiling counters (--profile surfaces these via the evaluator)
+        self.structure_raw_hits = 0
+        self.structure_canon_hits = 0
+        self.structure_disk_hits = 0
+        self.structure_misses = 0
+        self.structure_merged = 0     # canonical entries adopted from peers
+        self.structure_time_s = 0.0   # wall time inside compute_structure
 
     def structure(self, nodes: frozenset) -> SubgraphStructure:
         st = self._structures.get(nodes)
-        if st is None:
-            st = compute_structure(self.g, set(nodes), out_tile=self.out_tile)
-            self._structures[nodes] = st
+        if st is not None:
+            self.structure_raw_hits += 1
+            return st
+        key: Optional[Tuple] = None
+        if self.canonical:
+            key = canonical_structure_key(self.g, nodes, self.out_tile)
+            st = self._canon.get(key)
+            if st is None and self.struct_cache is not None:
+                st = self.struct_cache.get(key)
+                if st is not None:
+                    self.structure_disk_hits += 1
+                    self._canon[key] = st
+            elif st is not None:
+                self.structure_canon_hits += 1
+            if st is not None:
+                st = dataclass_replace(st, nodes=tuple(sorted(nodes)))
+                self._structures[nodes] = st
+                return st
+        t0 = time.perf_counter()
+        st = compute_structure(self.g, set(nodes), out_tile=self.out_tile)
+        self.structure_time_s += time.perf_counter() - t0
+        self.structure_misses += 1
+        self._structures[nodes] = st
+        if key is not None and st.sched_error is None:
+            self._canon[key] = st
+            if self.struct_cache is not None:
+                self.struct_cache.put(key, st)
         return st
 
     def cost(self, nodes: frozenset, acc: AcceleratorConfig) -> SubgraphCost:
         return finish_cost(self.structure(nodes), acc)
+
+    def canon_snapshot(self) -> Dict[Tuple, SubgraphStructure]:
+        """Picklable copy of the canonical tier (cross-process shipping)."""
+        return dict(self._canon)
+
+    def merge_canon(
+            self, entries: Mapping[Tuple, SubgraphStructure]) -> int:
+        """Adopt canonical entries from a peer kernel (worker join).
+
+        Existing keys win — the kernel is deterministic, so both sides hold
+        structures equal up to the ``nodes`` stamp, which every canonical
+        hit re-stamps anyway.  Returns the number of new entries.
+        """
+        added = 0
+        canon = self._canon
+        for key, st in entries.items():
+            if key not in canon:
+                canon[key] = st
+                added += 1
+        self.structure_merged += added
+        return added
 
 
 def evaluate_partition(
@@ -497,10 +653,13 @@ class CachedEvaluator:
     """
 
     def __init__(self, g: Graph, out_tile: int = 1,
-                 executor: Optional["Executor"] = None) -> None:
+                 executor: Optional["Executor"] = None,
+                 canonical: Optional[bool] = None,
+                 struct_cache: Optional[Any] = None) -> None:
         self.g = g
         self.out_tile = out_tile
-        self.kernel = CostKernel(g, out_tile=out_tile)
+        self.kernel = CostKernel(g, out_tile=out_tile, canonical=canonical,
+                                 struct_cache=struct_cache)
         self._executor = executor
         self._cache: Dict[Tuple, SubgraphCost] = {}
         self.evaluations = 0   # cache misses (true cost-model invocations)
@@ -619,6 +778,39 @@ class CachedEvaluator:
     def cache_snapshot(self) -> Dict[Tuple, SubgraphCost]:
         """Picklable copy of the memo table, for cross-process merging."""
         return dict(self._cache)
+
+    def merge_structures(
+            self, entries: Mapping[Tuple, SubgraphStructure]) -> int:
+        """Adopt canonical structure entries from a peer evaluator's kernel
+        (the structure half of parallel ``compare``'s merge-on-join; the
+        cost half is :meth:`merge_cache`).  Returns new entries adopted."""
+        return self.kernel.merge_canon(entries)
+
+    def structure_snapshot(self) -> Dict[Tuple, SubgraphStructure]:
+        """Picklable copy of the kernel's canonical structure tier."""
+        return self.kernel.canon_snapshot()
+
+    def counters(self) -> Dict[str, Any]:
+        """One flat dict of every cache/structure counter (the ``--profile``
+        surface).  Structure counters are process-local: misses evaluated by
+        a worker backend show up here only as adopted canonical entries
+        (``structure_merged``), not as local derivations."""
+        k = self.kernel
+        out: Dict[str, Any] = {
+            "lookups": self.lookups,
+            "evaluations": self.evaluations,
+            "merged": self.merged,
+            "structure_raw_hits": k.structure_raw_hits,
+            "structure_canon_hits": k.structure_canon_hits,
+            "structure_disk_hits": k.structure_disk_hits,
+            "structure_misses": k.structure_misses,
+            "structure_merged": k.structure_merged,
+            "structure_derive_s": k.structure_time_s,
+            "canonical": k.canonical,
+        }
+        if k.struct_cache is not None:
+            out["structure_disk_writes"] = k.struct_cache.writes
+        return out
 
     def plan(self, groups: Sequence[Set[int]], acc: AcceleratorConfig) -> PlanCost:
         return PlanCost(

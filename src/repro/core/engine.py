@@ -105,32 +105,62 @@ class SerialExecutor(Executor):
 # -- process backend ---------------------------------------------------------
 
 _WORKER_KERNEL: Optional[CostKernel] = None
+_WORKER_CANON_SHIPPED = 0  # canonical entries already shipped to the parent
 
 # wire order derived from the dataclass itself, so both protocol ends stay
 # in sync across field reorders (and renames fail loudly at construction)
 _COST_FIELDS = tuple(f.name for f in dataclass_fields(SubgraphCost))
+_STRUCT_FIELDS = tuple(f.name for f in dataclass_fields(SubgraphStructure))
 
 
-def _init_worker(g: Graph, out_tile: int) -> None:
-    global _WORKER_KERNEL
-    _WORKER_KERNEL = CostKernel(g, out_tile=out_tile)
+def _init_worker(g: Graph, out_tile: int, canonical: bool = True,
+                 struct_cache_dir: Optional[str] = None) -> None:
+    global _WORKER_KERNEL, _WORKER_CANON_SHIPPED
+    struct_cache = None
+    if struct_cache_dir:
+        from .structcache import StructureCache
+
+        struct_cache = StructureCache(struct_cache_dir)
+    _WORKER_KERNEL = CostKernel(g, out_tile=out_tile, canonical=canonical,
+                                struct_cache=struct_cache)
+    _WORKER_CANON_SHIPPED = 0
 
 
-def _worker_eval(accs: List[AcceleratorConfig],
-                 shard: List[Tuple[Tuple[int, ...], int]]) -> List[tuple]:
+def _worker_eval(
+    accs: List[AcceleratorConfig],
+    shard: List[Tuple[Tuple[int, ...], int]],
+) -> Tuple[List[tuple], List[Tuple[tuple, tuple]]]:
     """Evaluate ``(nodes, acc-index)`` pairs; return plain field tuples.
 
     The compact protocol (an acc table instead of an acc per query, field
     tuples instead of dataclass instances) roughly halves the pickle cost,
     which is what bounds the process backend on cheap kernels.
+
+    The second returned list ships the worker kernel's *new* canonical
+    structure entries — those derived since this worker's previous shard —
+    as ``(canonical_key, field-tuple)`` pairs with an empty ``nodes`` stamp
+    (every canonical hit re-stamps it anyway).  The parent adopts them into
+    its own kernel, so structures derived in workers keep paying off after
+    the pool is gone (dict insertion order makes "new since last ship" a
+    plain slice).
     """
+    global _WORKER_CANON_SHIPPED
     assert _WORKER_KERNEL is not None, "worker pool not initialized"
     cost = _WORKER_KERNEL.cost
     out = []
     for nodes, ai in shard:
         c = cost(frozenset(nodes), accs[ai])
         out.append(tuple(getattr(c, name) for name in _COST_FIELDS))
-    return out
+    canon = _WORKER_KERNEL._canon
+    fresh = []
+    if len(canon) > _WORKER_CANON_SHIPPED:
+        items = list(canon.items())[_WORKER_CANON_SHIPPED:]
+        _WORKER_CANON_SHIPPED = len(canon)
+        fresh = [(key,
+                  tuple(() if name == "nodes" else getattr(st, name)
+                        for name in _STRUCT_FIELDS))
+                 for key, st in items]
+    return out, fresh
 
 
 class ProcessExecutor(Executor):
@@ -160,10 +190,12 @@ class ProcessExecutor(Executor):
             # break REPL/stdin callers, and the workers themselves only run
             # the pure kernel (no JAX/threads).  The residual fork-while-
             # threaded risk is the same one compare(jobs=N) already accepts.
+            cache = kernel.struct_cache
             self._pool = ProcessPoolExecutor(
                 max_workers=self.jobs,
                 initializer=_init_worker,
-                initargs=(kernel.g, kernel.out_tile))
+                initargs=(kernel.g, kernel.out_tile, kernel.canonical,
+                          str(cache.root) if cache is not None else None))
             self._pool_kernel = kernel
         return self._pool
 
@@ -188,10 +220,17 @@ class ProcessExecutor(Executor):
                    for i in range(n_shards)]
         outs = [f.result() for f in futures]
         results: List[Optional[SubgraphCost]] = [None] * len(queries)
-        for s, shard_out in enumerate(outs):
+        for s, (shard_out, canon_wire) in enumerate(outs):
             for j, vals in enumerate(shard_out):
                 results[s + j * n_shards] = SubgraphCost(
                     **dict(zip(_COST_FIELDS, vals)))
+            if canon_wire:
+                # adopt worker-derived canonical structures so they keep
+                # serving hits in the parent (and in later serial batches)
+                kernel.merge_canon({
+                    key: SubgraphStructure(**dict(zip(_STRUCT_FIELDS, vals)))
+                    for key, vals in canon_wire
+                })
         return results  # type: ignore[return-value]
 
     def close(self) -> None:

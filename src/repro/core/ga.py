@@ -176,9 +176,34 @@ class Genome:
     acc: AcceleratorConfig
     cost: float = math.inf
     plan: Optional[PlanCost] = None
+    # lazy node->group index; rebuilt on demand after invalidate().  Excluded
+    # from comparison/repr: it is derived state, never genome identity.
+    _gid: Optional[List[int]] = field(default=None, repr=False, compare=False)
 
     def clone(self) -> "Genome":
         return Genome([set(s) for s in self.groups], self.acc)
+
+    def membership(self, n: int) -> List[int]:
+        """``membership(g.n)[v]`` = index of the group holding node ``v``.
+
+        Built once per genome and shared by every crossover/mutate this
+        genome participates in (the operators used to rebuild an O(n) dict
+        per child).  Any code that rebinds or mutates ``groups`` must call
+        :meth:`invalidate`; groups are disjoint by construction (normalize
+        output), so "last group wins" below never actually ties.
+        """
+        gid = self._gid
+        if gid is None or len(gid) != n:
+            gid = [-1] * n
+            for i, s in enumerate(self.groups):
+                for v in s:
+                    gid[v] = i
+            self._gid = gid
+        return gid
+
+    def invalidate(self) -> None:
+        """Drop the membership index after ``groups`` changed."""
+        self._gid = None
 
 
 # ---------------------------------------------------------------------------
@@ -188,23 +213,21 @@ class Genome:
 def crossover(g: Graph, mom: Genome, dad: Genome, hw: HWSpace,
               rng: random.Random) -> Genome:
     parents = (mom, dad)
-    gid_of = []
-    for p in parents:
-        d: Dict[int, int] = {}
-        for i, s in enumerate(p.groups):
-            for v in s:
-                d[v] = i
-        gid_of.append(d)
+    # cached per-parent membership indexes: a parent is crossed many times
+    # per generation, so the old per-call dict rebuild was O(n) * children
+    gid_of = (mom.membership(g.n), dad.membership(g.n))
 
-    decided: Dict[int, int] = {}          # node -> child group index
+    decided = [-1] * g.n                  # node -> child group index
     child_groups: List[Set[int]] = []
     for v in g.topo_order():
-        if v in decided:
+        if decided[v] >= 0:
             continue
         p = rng.randrange(2)
         src_group = parents[p].groups[gid_of[p][v]]
-        undecided = {u for u in src_group if u not in decided}
-        overlap = {u for u in src_group if u in decided}
+        undecided: Set[int] = set()
+        overlap: Set[int] = set()
+        for u in src_group:
+            (undecided if decided[u] < 0 else overlap).add(u)
         if overlap and rng.random() < 0.5:
             # Child-2 style: merge the undecided members into one subgraph of
             # an already-decided member
@@ -228,11 +251,14 @@ def mutate(g: Graph, genome: Genome, hw: HWSpace, rng: random.Random,
     child = genome.clone()
     r = rng.random()
     groups = child.groups
+    # the clone's groups equal the parent's, so the parent's cached
+    # membership index answers node->group for the child's pre-mutation
+    # state — no per-child O(n * groups) dict rebuild
     if r < p_node and g.n > 1:
         # modify-node: reassign a random node to a neighbour subgraph or a new one
         v = rng.randrange(g.n)
-        src = next(i for i, s in enumerate(groups) if v in s)
-        gid = {u: i for i, s in enumerate(groups) for u in s}
+        gid = genome.membership(g.n)
+        src = gid[v]
         neigh = {gid[u] for u in (g.preds(v) + g.succs(v))} - {src}
         choices = sorted(neigh) + ["new"]
         pick = rng.choice(choices)
@@ -252,7 +278,7 @@ def mutate(g: Graph, genome: Genome, hw: HWSpace, rng: random.Random,
             child.groups = normalize(g, rest)
     elif r < p_node + p_split + p_merge and len(groups) > 1:
         # merge two adjacent subgraphs (prefer connected pairs)
-        gid = {u: i for i, s in enumerate(groups) for u in s}
+        gid = genome.membership(g.n)
         pairs = {(min(gid[e.src], gid[e.dst]), max(gid[e.src], gid[e.dst]))
                  for e in g.edges if gid[e.src] != gid[e.dst]}
         if pairs:
@@ -295,6 +321,7 @@ def evaluate_genomes(g: Graph, genomes: Sequence[Genome], obj: Objective,
         g, [(genome.groups, genome.acc) for genome in genomes], ev)
     for genome, groups in zip(genomes, repaired):
         genome.groups = groups
+        genome.invalidate()  # repair rebound groups; drop the stale index
     plans = ev.plan_batch([(genome.groups, genome.acc)
                            for genome in genomes])
     for genome, plan in zip(genomes, plans):

@@ -76,6 +76,9 @@ class Graph:
         # undirected neighbour ids, for O(deg) connectivity queries (the GA's
         # normalize/repair loop calls them hundreds of thousands of times)
         self._und: Dict[int, List[int]] = {}
+        # topo_order() memo (a tuple, so the shared value is mutation-proof);
+        # invalidated by length whenever add_node grows the graph
+        self._topo: Optional[Tuple[int, ...]] = None
 
     # -- construction -----------------------------------------------------
     def add_node(
@@ -142,20 +145,38 @@ class Graph:
     def sinks(self) -> List[int]:
         return [v.idx for v in self.nodes if not self._out[v.idx]]
 
-    def topo_order(self) -> List[int]:
-        return list(range(self.n))  # insertion order is topological
+    def topo_order(self) -> Sequence[int]:
+        # insertion order is topological; memoized — search loops walk this
+        # once per crossover/partition sample
+        t = self._topo
+        if t is None or len(t) != len(self.nodes):
+            t = self._topo = tuple(range(len(self.nodes)))
+        return t
 
     # -- subgraph helpers ---------------------------------------------------
+    #
+    # These iterate the subgraph's own adjacency lists (O(sum of member
+    # degrees)) instead of every edge of the graph (O(E)) — compute_structure
+    # calls them per node-set query, which made the O(E) scans a measurable
+    # slice of structure-derivation time on 200+-node models.  Members are
+    # walked in sorted order so the returned edge order is a deterministic
+    # function of the node set (callers only ever set-reduce the result).
+
     def internal_edges(self, nodes: Set[int]) -> List[Edge]:
-        return [e for e in self.edges if e.src in nodes and e.dst in nodes]
+        _in = self._in
+        return [e for v in sorted(nodes) for e in _in[v] if e.src in nodes]
 
     def boundary_in(self, nodes: Set[int]) -> List[Edge]:
         """Edges entering ``nodes`` from outside."""
-        return [e for e in self.edges if e.dst in nodes and e.src not in nodes]
+        _in = self._in
+        return [e for v in sorted(nodes) for e in _in[v]
+                if e.src not in nodes]
 
     def boundary_out(self, nodes: Set[int]) -> List[Edge]:
         """Edges leaving ``nodes``."""
-        return [e for e in self.edges if e.src in nodes and e.dst not in nodes]
+        _out = self._out
+        return [e for v in sorted(nodes) for e in _out[v]
+                if e.dst not in nodes]
 
     def is_connected(self, nodes: Set[int]) -> bool:
         """Weak connectivity of the induced subgraph (paper: subgraphs must be

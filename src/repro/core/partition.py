@@ -87,12 +87,17 @@ def _topo_order_quotient(n_groups: int,
 
 def normalize(g: Graph, raw_groups: Sequence[Set[int]]) -> List[Set[int]]:
     """Repair arbitrary groups into a valid ordered partition."""
-    # 1. split disconnected groups into weak components
+    # 1. split disconnected groups into weak components (singletons are
+    # trivially connected — GA offspring are mostly singletons, so skip
+    # the component scan for them)
     groups: List[Set[int]] = []
     for s in raw_groups:
         if not s:
             continue
-        groups.extend(g.weakly_connected_components(set(s)))
+        if len(s) == 1:
+            groups.append(set(s))
+        else:
+            groups.extend(g.weakly_connected_components(set(s)))
 
     # 2. break quotient cycles by topological bisection of offending groups
     for _ in range(g.n + 1):
@@ -116,7 +121,12 @@ def normalize(g: Graph, raw_groups: Sequence[Set[int]]) -> List[Set[int]]:
         hi = {v for v in cand if v >= med}
         groups.remove(cand)
         for part in (lo, hi):
-            groups.extend(g.weakly_connected_components(part)) if part else None
+            if not part:
+                continue
+            if len(part) == 1:
+                groups.append(part)
+            else:
+                groups.extend(g.weakly_connected_components(part))
     raise RuntimeError("normalize did not converge")
 
 
@@ -128,7 +138,10 @@ def split_group_topo(g: Graph, s: Set[int], pieces: int = 2) -> List[Set[int]]:
     out: List[Set[int]] = []
     for i in range(0, len(order), k):
         chunk = set(order[i: i + k])
-        out.extend(g.weakly_connected_components(chunk))
+        if len(chunk) == 1:
+            out.append(chunk)
+        else:
+            out.extend(g.weakly_connected_components(chunk))
     return out
 
 

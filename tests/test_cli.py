@@ -60,6 +60,53 @@ def test_explore_from_spec_file_reproduces(tmp_path, capsys):
     assert a.groups == b.groups
 
 
+def test_explore_profile_prints_structure_counters(tmp_path, capsys):
+    rc = main(["explore", "--workload", "vgg16", "--strategy", "ga",
+               "--budget", "200", "--opt", "population=10", "--profile"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "profile: wall" in out
+    assert "derive_schedule" in out
+    assert "canonical" in out and "raw" in out
+    # profiled run with a store: the stored artifact carries no timings,
+    # and the replay says so instead of printing a bogus profile
+    store = tmp_path / "store"
+    args = ["explore", "--workload", "vgg16", "--strategy", "greedy",
+            "--profile", "--store-dir", str(store),
+            "--out", str(tmp_path / "r.json")]
+    assert main(args) == 0
+    first = capsys.readouterr().out
+    assert "profile: wall" in first
+    stored = ExploreResult.from_json((tmp_path / "r.json").read_text())
+    assert "profile" in stored.meta  # --out sees the in-memory profile...
+    raw = json.loads(next(store.glob("*.json")).read_text())
+    assert "profile" not in raw["meta"]  # ...the store never does
+    assert main(args) == 0
+    assert "store hit — no search ran" in capsys.readouterr().out
+
+
+def test_explore_struct_cache_dir_round_trip(tmp_path, capsys):
+    cache_dir = tmp_path / "structs"
+    args = ["explore", "--workload", "vgg16", "--strategy", "ga",
+            "--budget", "200", "--opt", "population=10", "--profile",
+            "--struct-cache-dir", str(cache_dir),
+            "--out", str(tmp_path / "cold.json")]
+    assert main(args) == 0
+    cold_out = capsys.readouterr().out
+    assert "disk hits" in cold_out
+    assert any(cache_dir.glob("*.json"))  # the cold run populated the cache
+    cold = ExploreResult.from_json((tmp_path / "cold.json").read_text())
+    warm_args = list(args)
+    warm_args[-1] = str(tmp_path / "warm.json")
+    assert main(warm_args) == 0
+    warm = ExploreResult.from_json((tmp_path / "warm.json").read_text())
+    assert warm.meta["profile"]["structure_misses"] == 0  # fully warm
+    assert warm.meta["profile"]["structure_disk_hits"] > 0
+    # the warm run is bitwise-identical to the cold one (minus timings)
+    cold.meta.pop("profile"), warm.meta.pop("profile")
+    assert warm.to_json() == cold.to_json()
+
+
 def test_compare_out_is_ranked_json(tmp_path, capsys):
     out_path = tmp_path / "cmp.json"
     rc = main(["compare", "--workload", "vgg16", "--strategies", "greedy,dp",

@@ -297,6 +297,35 @@ def test_count_run_distinct_queries_invariant_across_backends():
     assert len(set(counts.values())) == 1, counts
 
 
+def test_evaluations_count_distinct_queries_despite_canonical_hits():
+    """``evaluations`` (and run()'s distinct-query count) are pinned to the
+    raw (nodes, hw-point) key: a canonical structure hit still counts as a
+    distinct evaluation — the canonical memo accelerates, never re-defines,
+    the accounting."""
+    g = small_graph()  # nodes 1 and 2 are isomorphic singletons
+    acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    ev = CachedEvaluator(g, canonical=True)
+    with ev.count_run() as touched:
+        ev.subgraph({1}, acc)
+        ev.subgraph({2}, acc)
+    assert ev.evaluations == 2            # two distinct raw queries...
+    assert len(touched) == 2
+    assert ev.kernel.structure_misses == 1  # ...but one schedule derivation
+    assert ev.kernel.structure_canon_hits == 1
+
+
+def test_results_and_evaluations_invariant_under_canonical_toggle(
+        monkeypatch):
+    """REPRO_STRUCT_CANON=0 (the honest-measurement escape hatch) changes
+    nothing observable: bitwise-identical results, same evaluations."""
+    spec = fixed_spec()
+    base = run(spec, graph=small_graph())
+    monkeypatch.setenv("REPRO_STRUCT_CANON", "0")
+    off = run(spec, graph=small_graph())
+    assert off.to_json() == base.to_json()
+    assert off.evaluations == base.evaluations
+
+
 def test_search_result_evaluations_invariant_across_backends():
     """run_ga's raw SearchResult.evaluations (true cache misses), not just
     the distinct-query count run() reports, must not depend on the backend."""
