@@ -29,7 +29,10 @@ BATCHES = (1, 2, 8)
 def table3_metrics(plan, acc: AcceleratorConfig, n: int, b: int) -> Dict:
     """Energy(mJ)/latency(ms) for n weight-sharing cores and batch b.
     Weights load from DRAM once per subgraph (reused across the batch) and
-    rotate across cores over the crossbar; activations scale with b."""
+    rotate across cores over the crossbar; activations scale with b.  The
+    crossbar broadcast is the cost model's own §5.4.2 charge
+    (``SubgraphCost.noc_bytes`` == ``(n - 1) * ema_w`` since the specs set
+    ``weight_share_cores=n``), not a benchmark-side re-derivation."""
     e_glb = acc.sram_pj_per_byte(acc.glb_bytes)
     energy_pj = 0.0
     lat_cycles = 0.0
@@ -40,7 +43,7 @@ def table3_metrics(plan, acc: AcceleratorConfig, n: int, b: int) -> Dict:
                       + b * acts * acc.e_dram_pj_per_byte
                       + b * s.glb_access_bytes * e_glb
                       + b * s.macs * acc.e_mac_pj
-                      + (n - 1) * w * acc.e_noc_pj_per_byte)
+                      + s.noc_bytes * acc.e_noc_pj_per_byte)
         compute = b * s.macs / (acc.macs_per_cycle * n)
         io = (w + b * acts) / acc.dram_bytes_per_cycle
         lat_cycles += max(compute, io)

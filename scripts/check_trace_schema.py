@@ -10,8 +10,11 @@ simulator" section) plus the internal invariants that make a trace
 trustworthy: totals are consistent with the per-step timeline, the
 bandwidth profile is internally ordered (p50 <= p95 <= p99 <= peak), and
 the embedded cross-validation verdict (if present) agrees with the
-totals.  Importable: ``validate_trace_dict(doc)`` returns a list of error
-strings (empty == valid), which `tests/test_cli.py` reuses.
+totals.  Version 2 adds the NoC fabric contract (per-step ``noc_bytes`` /
+``core``, a top-level ``noc`` section with aggregate and per-link
+profiles); version-1 documents (no NoC fields) are still accepted.
+Importable: ``validate_trace_dict(doc)`` returns a list of error strings
+(empty == valid), which `tests/test_cli.py` reuses.
 """
 
 from __future__ import annotations
@@ -21,7 +24,7 @@ import sys
 from typing import Any, Dict, List
 
 TRACE_FORMAT = "cocco-trace"
-TRACE_FORMAT_VERSION = 1
+TRACE_FORMAT_VERSIONS = (1, 2)
 
 _TOP_KEYS = {"format", "version", "graph", "acc", "out_tile", "groups",
              "totals", "profile", "subgraphs"}
@@ -34,10 +37,30 @@ _SUBGRAPH_KEYS = {"index", "nodes", "act_in", "act_out", "w_first",
                   "region_table_bytes"}
 _STEP_KEYS = {"subgraph", "step", "t_cycles", "cycles", "act_in", "act_out",
               "w_in", "occ_act", "occ_w", "rows", "macs"}
+# v2 additions (NoC fabric traffic + per-core attribution)
+_SUBGRAPH_KEYS_V2 = _SUBGRAPH_KEYS | {"noc_bytes"}
+_STEP_KEYS_V2 = _STEP_KEYS | {"noc_bytes", "core"}
+_NOC_KEYS = {"links", "total_bytes", "aggregate", "per_link"}
 
 
 def _num(x: Any) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _check_profile(prof: Any, where: str, errs: List[str]) -> None:
+    """Shared checks for any BandwidthProfile-shaped object."""
+    if not isinstance(prof, dict) or _PROFILE_KEYS - set(prof):
+        errs.append(f"{where} needs keys {sorted(_PROFILE_KEYS)}")
+        return
+    for k in _PROFILE_KEYS:
+        if not _num(prof[k]) or prof[k] < 0:
+            errs.append(f"{where}.{k} must be a non-negative number")
+    eps = 1e-6
+    if not (prof["p50"] <= prof["p95"] * (1 + eps)
+            and prof["p95"] <= prof["p99"] * (1 + eps)
+            and prof["p99"] <= prof["peak"] * (1 + eps)):
+        errs.append(f"{where} percentiles must satisfy "
+                    f"p50 <= p95 <= p99 <= peak")
 
 
 def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
@@ -51,51 +74,86 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
         return errs
     if doc["format"] != TRACE_FORMAT:
         errs.append(f"format must be {TRACE_FORMAT!r}, got {doc['format']!r}")
-    if doc["version"] != TRACE_FORMAT_VERSION:
-        errs.append(f"unsupported version {doc['version']!r}")
+    version = doc["version"]
+    if version not in TRACE_FORMAT_VERSIONS:
+        errs.append(f"unsupported version {version!r}")
+        return errs
+    v2 = version >= 2
+    sub_keys = _SUBGRAPH_KEYS_V2 if v2 else _SUBGRAPH_KEYS
+    step_keys = _STEP_KEYS_V2 if v2 else _STEP_KEYS
 
     totals = doc["totals"]
-    if not isinstance(totals, dict) or _TOTAL_KEYS - set(totals):
-        errs.append(f"totals needs keys {sorted(_TOTAL_KEYS)}")
+    total_keys = _TOTAL_KEYS | ({"noc_bytes"} if v2 else set())
+    if not isinstance(totals, dict) or total_keys - set(totals):
+        errs.append(f"totals needs keys {sorted(total_keys)}")
     else:
-        for k in _TOTAL_KEYS:
+        for k in total_keys:
             if not _num(totals[k]) or totals[k] < 0:
                 errs.append(f"totals.{k} must be a non-negative number")
         if totals["dram_bytes"] != totals["dram_in"] + totals["dram_out"]:
             errs.append("totals.dram_bytes != dram_in + dram_out")
 
     prof = doc["profile"]
-    if not isinstance(prof, dict) or _PROFILE_KEYS - set(prof):
-        errs.append(f"profile needs keys {sorted(_PROFILE_KEYS)}")
-    else:
-        for k in _PROFILE_KEYS:
-            if not _num(prof[k]) or prof[k] < 0:
-                errs.append(f"profile.{k} must be a non-negative number")
-        eps = 1e-6
-        if not (prof["p50"] <= prof["p95"] * (1 + eps)
-                and prof["p95"] <= prof["p99"] * (1 + eps)
-                and prof["p99"] <= prof["peak"] * (1 + eps)):
-            errs.append("profile percentiles must satisfy "
-                        "p50 <= p95 <= p99 <= peak")
-        if isinstance(totals, dict) and "dram_bytes" in totals \
-                and prof.get("total_bytes") != totals["dram_bytes"]:
-            errs.append("profile.total_bytes != totals.dram_bytes")
+    _check_profile(prof, "profile", errs)
+    if isinstance(prof, dict) and isinstance(totals, dict) \
+            and "dram_bytes" in totals \
+            and prof.get("total_bytes") != totals["dram_bytes"]:
+        errs.append("profile.total_bytes != totals.dram_bytes")
+
+    noc = doc.get("noc")
+    if v2:
+        if not isinstance(noc, dict) or _NOC_KEYS - set(noc):
+            errs.append(f"v2 noc section needs keys {sorted(_NOC_KEYS)}")
+            noc = None
+        else:
+            if not isinstance(noc["links"], int) or noc["links"] < 1:
+                errs.append("noc.links must be a positive integer "
+                            "(weight_share_cores)")
+            if not isinstance(noc["total_bytes"], int) \
+                    or noc["total_bytes"] < 0:
+                errs.append("noc.total_bytes must be a non-negative integer")
+            _check_profile(noc["aggregate"], "noc.aggregate", errs)
+            _check_profile(noc["per_link"], "noc.per_link", errs)
+            if isinstance(noc["aggregate"], dict) \
+                    and noc["aggregate"].get("total_bytes") \
+                    != noc["total_bytes"]:
+                errs.append("noc.aggregate.total_bytes != noc.total_bytes")
+            # symmetric rotation fabric: each of `links` links carries
+            # 1/links of the aggregate broadcast
+            if isinstance(noc["aggregate"], dict) \
+                    and isinstance(noc["per_link"], dict) \
+                    and isinstance(noc["links"], int) and noc["links"] >= 1:
+                agg, per = noc["aggregate"], noc["per_link"]
+                for k in ("peak", "total_bytes"):
+                    if _num(agg.get(k)) and _num(per.get(k)) and not (
+                            abs(per[k] * noc["links"] - agg[k])
+                            <= 1e-6 * max(agg[k], 1.0)):
+                        errs.append(f"noc.per_link.{k} * links != "
+                                    f"noc.aggregate.{k}")
+            if isinstance(totals, dict) \
+                    and totals.get("noc_bytes") != noc["total_bytes"]:
+                errs.append("totals.noc_bytes != noc.total_bytes")
 
     subs = doc["subgraphs"]
     if not isinstance(subs, list) or not subs:
         errs.append("subgraphs must be a non-empty list")
         subs = []
+    noc_sub_sum = 0
     for i, sg in enumerate(subs):
-        if not isinstance(sg, dict) or _SUBGRAPH_KEYS - set(sg):
-            errs.append(f"subgraphs[{i}] needs keys "
-                        f"{sorted(_SUBGRAPH_KEYS)}")
+        if not isinstance(sg, dict) or sub_keys - set(sg):
+            errs.append(f"subgraphs[{i}] needs keys {sorted(sub_keys)}")
             continue
         if sg["index"] != i:
             errs.append(f"subgraphs[{i}].index must be {i}")
-        for k in ("act_in", "act_out", "w_first", "w_stream"):
+        check = ("act_in", "act_out", "w_first", "w_stream")
+        if v2:
+            check += ("noc_bytes",)
+        for k in check:
             if not isinstance(sg[k], int) or sg[k] < 0:
                 errs.append(f"subgraphs[{i}].{k} must be a "
                             f"non-negative integer")
+        if v2 and isinstance(sg.get("noc_bytes"), int):
+            noc_sub_sum += sg["noc_bytes"]
         if not isinstance(sg["nodes"], list) or not sg["nodes"]:
             errs.append(f"subgraphs[{i}].nodes must be a non-empty list")
 
@@ -106,9 +164,11 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
             steps = []
         t_prev = -1.0
         sums = {"act_in": 0, "act_out": 0, "w_in": 0}
+        if v2:
+            sums["noc_bytes"] = 0
         for i, stp in enumerate(steps):
-            if not isinstance(stp, dict) or _STEP_KEYS - set(stp):
-                errs.append(f"steps[{i}] needs keys {sorted(_STEP_KEYS)}")
+            if not isinstance(stp, dict) or step_keys - set(stp):
+                errs.append(f"steps[{i}] needs keys {sorted(step_keys)}")
                 continue
             if not _num(stp["cycles"]) or stp["cycles"] < 0:
                 errs.append(f"steps[{i}].cycles must be non-negative")
@@ -129,6 +189,8 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
                 errs.append("sum of step loads != totals.dram_in")
             if sums["act_out"] != totals["dram_out"]:
                 errs.append("sum of step stores != totals.dram_out")
+            if v2 and steps and sums["noc_bytes"] != totals.get("noc_bytes"):
+                errs.append("sum of step noc_bytes != totals.noc_bytes")
 
     meta = doc.get("meta")
     if isinstance(meta, dict) and isinstance(meta.get("validation"), dict):
@@ -136,10 +198,16 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
         if val.get("ok") is not True:
             errs.append("meta.validation.ok is not true "
                         "(simulated traffic drifted from the analytical EMA)")
-        elif isinstance(totals, dict) and \
-                val.get("total_simulated_bytes") != totals.get("dram_bytes"):
-            errs.append("meta.validation.total_simulated_bytes "
-                        "!= totals.dram_bytes")
+        else:
+            if isinstance(totals, dict) and \
+                    val.get("total_simulated_bytes") != totals.get(
+                        "dram_bytes"):
+                errs.append("meta.validation.total_simulated_bytes "
+                            "!= totals.dram_bytes")
+            if v2 and isinstance(noc, dict) and \
+                    val.get("noc_simulated_bytes") != noc.get("total_bytes"):
+                errs.append("meta.validation.noc_simulated_bytes "
+                            "!= noc.total_bytes")
     return errs
 
 
@@ -161,9 +229,13 @@ def main(argv: List[str]) -> int:
         print(f"{path}: INVALID ({len(errs)} errors)", file=sys.stderr)
         return 1
     n_steps = len(doc.get("steps", []))
-    print(f"{path}: valid {TRACE_FORMAT} v{TRACE_FORMAT_VERSION} — "
+    noc = ""
+    if doc.get("version", 1) >= 2:
+        noc = (f", {doc['noc']['total_bytes']} NoC bytes over "
+               f"{doc['noc']['links']} links")
+    print(f"{path}: valid {TRACE_FORMAT} v{doc['version']} — "
           f"{len(doc['subgraphs'])} subgraphs, {n_steps} steps, "
-          f"{doc['totals']['dram_bytes']} DRAM bytes")
+          f"{doc['totals']['dram_bytes']} DRAM bytes{noc}")
     return 0
 
 

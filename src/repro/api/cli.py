@@ -142,11 +142,18 @@ def _spec_from_args(args: argparse.Namespace) -> ExploreSpec:
             f"unknown strategy {args.strategy!r}; "
             f"registered: {', '.join(list_strategies())}")
     options = opts_cls(**_parse_opt_overrides(args.opt))
+    cores = getattr(args, "cores", None)
+    try:
+        core_candidates = tuple(
+            int(c) for c in cores.split(",") if c.strip()) if cores else ()
+    except ValueError:
+        raise SystemExit(f"--cores expects comma-separated integers, "
+                         f"got {cores!r}")
     spec = ExploreSpec(
         workload=args.workload,
         strategy=args.strategy,
         objective=Objective(metric=args.metric, alpha=args.alpha),
-        hw=HWSpace(mode=args.hw_mode),
+        hw=HWSpace(mode=args.hw_mode, core_candidates=core_candidates),
         sample_budget=args.budget,
         seed=args.seed,
         out_tile=args.out_tile,
@@ -415,6 +422,16 @@ def cmd_trace(args: argparse.Namespace) -> int:
           f"p95={prof.percentiles['p95'] / 1e9:.2f}  "
           f"p50={prof.percentiles['p50'] / 1e9:.2f}  "
           f"sustained={prof.sustained / 1e9:.2f} GB/s")
+    if trace.total_noc_bytes:
+        links = res.acc.weight_share_cores
+        agg = trace.noc_profile()
+        link = trace.noc_profile(links=links)
+        print(f"  NoC broadcast: {trace.total_noc_bytes / 1e6:.2f} MB over "
+              f"{links} links; aggregate "
+              f"peak={agg.peak / 1e9:.2f} GB/s "
+              f"p95={agg.percentiles['p95'] / 1e9:.2f}; per-link "
+              f"peak={link.peak / 1e9:.2f} GB/s "
+              f"p95={link.percentiles['p95'] / 1e9:.2f}")
     print(f"  {report.summary()}")
     if args.out:
         meta = {"workload": workload, "strategy": strategy, "seed": seed,
@@ -601,6 +618,11 @@ def _add_spec_args(p: argparse.ArgumentParser) -> None:
                    help="Formula-2 weight (None => partition-only Formula 1)")
     p.add_argument("--hw-mode", default="fixed",
                    choices=["fixed", "separate", "shared"])
+    p.add_argument("--cores", default=None, metavar="N[,N...]",
+                   help="comma-separated weight-share core counts to "
+                        "co-explore (HWSpace.core_candidates), e.g. "
+                        "--cores 1,2,4; omit to keep the core count fixed "
+                        "at the base config's value")
     p.add_argument("--budget", type=int, default=5_000,
                    help="sample budget for search strategies")
     p.add_argument("--seed", type=int, default=0)

@@ -101,13 +101,19 @@ def objective_from_dict(d: Dict[str, Any]) -> Objective:
 
 
 def hw_to_dict(hw: HWSpace) -> Dict[str, Any]:
-    return {
+    d = {
         "mode": hw.mode,
         "base": acc_to_dict(hw.base),
         "glb_candidates": list(hw.glb_candidates),
         "wbuf_candidates": list(hw.wbuf_candidates),
         "shared_candidates": list(hw.shared_candidates),
     }
+    # written only when the core axis is explored: the default () serializes
+    # byte-identically to pre-core-axis specs, so store/zoo addresses
+    # (spec_key hashes this dict) of existing artifacts stay valid
+    if hw.core_candidates:
+        d["core_candidates"] = list(hw.core_candidates)
+    return d
 
 
 def hw_from_dict(d: Dict[str, Any]) -> HWSpace:
@@ -117,6 +123,7 @@ def hw_from_dict(d: Dict[str, Any]) -> HWSpace:
         glb_candidates=tuple(d["glb_candidates"]),
         wbuf_candidates=tuple(d["wbuf_candidates"]),
         shared_candidates=tuple(d["shared_candidates"]),
+        core_candidates=tuple(d.get("core_candidates", ())),
     )
 
 

@@ -247,6 +247,9 @@ def compare(spec: ExploreSpec,
     serial path.  Strategies registered at import time (the built-ins, or
     anything importable from the worker) are supported; with the ``fork``
     start method (Linux default) runtime-registered strategies work too.
+    When jax has been imported, workers start via ``forkserver`` instead
+    (see :func:`repro.core.engine.pool_mp_context`) so no process forks a
+    multithreaded jax runtime.
 
     ``store`` serves store hits in the parent without spawning a worker and
     persists every miss, so an interrupted comparison resumes where it
@@ -305,6 +308,8 @@ def _compare_parallel(subs: List[ExploreSpec], g: Graph,
                       store: Optional[ResultStore],
                       struct_cache_dir: Optional[str] = None,
                       ) -> List[ExploreResult]:
+    from repro.core.engine import pool_mp_context
+
     results: List[Optional[ExploreResult]] = [None] * len(subs)
     pending = list(range(len(subs)))
     if store is not None:
@@ -333,7 +338,8 @@ def _compare_parallel(subs: List[ExploreSpec], g: Graph,
     if unique:
         store_dir = str(store.root) if store is not None else None
         with ProcessPoolExecutor(
-                max_workers=min(jobs, len(unique))) as pool:
+                max_workers=min(jobs, len(unique)),
+                mp_context=pool_mp_context()) as pool:
             futures = {
                 pool.submit(_compare_worker, subs[i].to_json(), g, store_dir,
                             struct_cache_dir):

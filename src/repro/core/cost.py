@@ -48,8 +48,11 @@ KB = 1024
 MB = 1024 * 1024
 
 # every metric PlanCost.metric / Objective accept; "bandwidth" is the
-# percentile of the plan's traffic-segment profile (see traffic_segments)
-METRICS: Tuple[str, ...] = ("ema", "energy", "latency", "bandwidth")
+# percentile of the plan's traffic-segment profile (see traffic_segments);
+# "noc_p95" / "noc_link_peak" are the multi-core broadcast-fabric analogues
+# (see noc_segments) — zero whenever weight_share_cores == 1
+METRICS: Tuple[str, ...] = ("ema", "energy", "latency", "bandwidth",
+                            "noc_p95", "noc_link_peak")
 BANDWIDTH_PERCENTILE = 95.0
 
 # reason prefix _stream_single_layer stamps on a streamed subgraph; the
@@ -74,6 +77,19 @@ class AcceleratorConfig:
     n_cores: int = 1
     e_noc_pj_per_byte: float = 2.0       # core-to-core crossbar (Arteris-like)
     weight_share_cores: int = 1          # §5.4.2: cores hold 1/n of weights
+
+    def __post_init__(self) -> None:
+        # fail typos/garbage at construction (like Objective.metric): the
+        # kernel used to clamp a zero/negative share with max(share, 1),
+        # silently turning a config error into single-core arithmetic
+        if self.weight_share_cores < 1:
+            raise ValueError(
+                f"weight_share_cores must be >= 1, got "
+                f"{self.weight_share_cores}; use 1 for a single core "
+                f"(no weight sharing)")
+        if self.n_cores < 1:
+            raise ValueError(
+                f"n_cores must be >= 1, got {self.n_cores}")
 
     @property
     def buf_size_total(self) -> int:
@@ -151,6 +167,10 @@ class SubgraphCost:
     weight_resident: int = 0
     glb_access_bytes: int = 0
     wbuf_access_bytes: int = 0
+    # §5.4.2 multi-core weight sharing: bytes rotated across the core-to-core
+    # fabric so every core sees the full weight set while buffering only its
+    # 1/n shard — (weight_share_cores - 1) * ema_w, zero on a single core
+    noc_bytes: int = 0
     feasible: bool = True
     reason: str = ""
 
@@ -196,6 +216,7 @@ class SubgraphCost:
             self.ema_total * acc.e_dram_pj_per_byte
             + self.glb_access_bytes * e_glb
             + self.wbuf_access_bytes * e_w
+            + self.noc_bytes * acc.e_noc_pj_per_byte
             + self.macs * acc.e_mac_pj
         )
 
@@ -291,6 +312,55 @@ class PlanCost:
                  for bytes_, cycles in self.traffic_segments() if cycles > 0]
         return time_weighted_percentile(pairs, p)
 
+    @property
+    def noc_total(self) -> int:
+        """Total weight-broadcast bytes over the core-to-core fabric."""
+        return sum(s.noc_bytes for s in self.subgraphs)
+
+    def noc_segments(self) -> List[Tuple[int, float]]:
+        """``(noc_bytes, duration_cycles)`` per requirement segment: one per
+        subgraph, on the *same* timeline as :meth:`traffic_segments`.
+
+        A weight byte crosses the fabric when it arrives from DRAM, so
+        segment ``i`` broadcasts its own re-streamed blocks plus the next
+        subgraph's prefetched first load — ``(share - 1) *`` the weight
+        bytes of the matching DRAM segment.  The prologue broadcast (the
+        first subgraph's initial weights) is excluded for the same reason
+        the DRAM prologue is (see :meth:`prologue_traffic`); it still
+        counts toward :attr:`noc_total`.
+        """
+        share = self.acc.weight_share_cores
+        segs: List[Tuple[int, float]] = []
+        subs = self.subgraphs
+        for i, s in enumerate(subs):
+            b = s.traffic_breakdown()
+            nxt = (subs[i + 1].traffic_breakdown().weight_first
+                   if i + 1 < len(subs) else 0)
+            segs.append(((share - 1) * (b.weight_stream + nxt),
+                         s.latency_cycles(self.acc)))
+        return segs
+
+    def noc_percentile(self, p: float = BANDWIDTH_PERCENTILE) -> float:
+        """Time-weighted percentile of aggregate NoC bandwidth, bytes/s."""
+        freq = self.acc.freq_hz
+        pairs = [(bytes_ / cycles * freq, cycles)
+                 for bytes_, cycles in self.noc_segments() if cycles > 0]
+        return time_weighted_percentile(pairs, p)
+
+    def noc_link_peak(self) -> float:
+        """Peak *per-link* NoC bandwidth over the timeline, in bytes/s.
+
+        The rotation fabric is symmetric over ``weight_share_cores`` links
+        (each core forwards its shard to one neighbour per hop), so a
+        segment's broadcast bytes spread evenly: per link, ``bytes /
+        share``.
+        """
+        share = self.acc.weight_share_cores
+        freq = self.acc.freq_hz
+        return max((bytes_ / share / cycles * freq
+                    for bytes_, cycles in self.noc_segments()
+                    if cycles > 0), default=0.0)
+
     def metric(self, name: str) -> float:
         if name == "ema":
             return float(self.ema_total)
@@ -300,6 +370,10 @@ class PlanCost:
             return self.latency_cycles
         if name == "bandwidth":
             return self.bandwidth_percentile()
+        if name == "noc_p95":
+            return self.noc_percentile(95.0)
+        if name == "noc_link_peak":
+            return self.noc_link_peak()
         raise ValueError(
             f"unknown plan metric {name!r}; valid metrics: "
             f"{', '.join(METRICS)}")
@@ -397,13 +471,15 @@ def finish_cost(st: SubgraphStructure, acc: AcceleratorConfig) -> SubgraphCost:
     if st.sched_error is not None:
         sc.feasible = False
         sc.reason = f"schedule: {st.sched_error}"
+        sc.noc_bytes = (acc.weight_share_cores - 1) * sc.ema_w
         return sc
     sc.footprint = st.footprint
 
     glb_cap = acc.glb_bytes
     wbuf_cap = acc.glb_bytes if acc.shared else acc.wbuf_bytes
-    # multi-core weight sharing (§5.4.2): each core buffers 1/n of the weights
-    sc.weight_resident = sc.weight_resident // max(acc.weight_share_cores, 1)
+    # multi-core weight sharing (§5.4.2): each core buffers 1/n of the
+    # weights (construction validates weight_share_cores >= 1)
+    sc.weight_resident = sc.weight_resident // acc.weight_share_cores
     single = len(st.nodes) == 1
     if acc.shared:
         if sc.footprint + sc.weight_resident > glb_cap:
@@ -427,6 +503,10 @@ def finish_cost(st: SubgraphStructure, acc: AcceleratorConfig) -> SubgraphCost:
 
     sc.glb_access_bytes = st.glb_access_bytes
     sc.wbuf_access_bytes = sc.weight_resident  # one streaming pass per sweep
+    # §5.4.2 NoC charge: every DRAM-loaded weight byte (ema_w, *after* any
+    # streaming resolution — a streamed sweep rotates each re-loaded block
+    # too) crosses the fabric to the weight_share_cores - 1 peer cores
+    sc.noc_bytes = (acc.weight_share_cores - 1) * sc.ema_w
     return sc
 
 

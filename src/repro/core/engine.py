@@ -73,9 +73,13 @@ def needs_scalar_fallback(st: SubgraphStructure,
     a failed schedule short-circuits in ``finish_cost`` and has nothing to
     batch.  The boundary is inclusive (``>=``) so the batched path never
     touches the first representable value that *could* round differently.
+    The ``share * weight_total`` clause bounds the NoC product: with it (and
+    the footprint bound on the block count), ``(share - 1) * ema_w`` stays
+    below ``2**62`` even for a streamed sweep, so int64 cannot overflow.
     """
     return (st.sched_error is not None
             or max(st.footprint, st.weight_total) >= _PROD_SAFE
+            or acc.weight_share_cores * st.weight_total >= _PROD_SAFE
             or max(acc.glb_bytes, acc.wbuf_bytes) >= _FLOAT_EXACT)
 
 
@@ -103,6 +107,26 @@ class SerialExecutor(Executor):
 
 
 # -- process backend ---------------------------------------------------------
+
+def pool_mp_context():
+    """The multiprocessing context every worker pool in the repo uses.
+
+    Default start method (fork on Linux) while the process is jax-free:
+    spawn/forkserver would re-import ``__main__`` and break REPL/stdin
+    callers, and the workers themselves only run the pure kernel.  Once jax
+    is imported the process is multithreaded and forking it both trips
+    jax's at-fork ``RuntimeWarning`` and genuinely risks deadlock, so the
+    pool switches to ``forkserver``: workers fork from a clean, jax-free
+    server process instead of this one.  The kernel is deterministic, so
+    results are identical under either context.
+    """
+    import multiprocessing as mp
+    import sys
+
+    if "jax" in sys.modules and "forkserver" in mp.get_all_start_methods():
+        return mp.get_context("forkserver")
+    return mp.get_context()
+
 
 _WORKER_KERNEL: Optional[CostKernel] = None
 _WORKER_CANON_SHIPPED = 0  # canonical entries already shipped to the parent
@@ -185,14 +209,10 @@ class ProcessExecutor(Executor):
         if self._pool is not None and self._pool_kernel is not kernel:
             self.close()
         if self._pool is None:
-            # Default start method (fork on Linux), matching the parallel
-            # compare() pool: spawn/forkserver would re-import __main__ and
-            # break REPL/stdin callers, and the workers themselves only run
-            # the pure kernel (no JAX/threads).  The residual fork-while-
-            # threaded risk is the same one compare(jobs=N) already accepts.
             cache = kernel.struct_cache
             self._pool = ProcessPoolExecutor(
                 max_workers=self.jobs,
+                mp_context=pool_mp_context(),
                 initializer=_init_worker,
                 initargs=(kernel.g, kernel.out_tile, kernel.canonical,
                           str(cache.root) if cache is not None else None))
@@ -259,9 +279,9 @@ class _BatchedFinishExecutor(Executor):
     def _finish_arrays(self, fp, w_total, single, glb, wbuf, shared, share):
         """Batched ``finish_cost`` arithmetic over equal-length arrays.
 
-        Returns ``(wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow,
-        stream, feasible)`` arrays (int64 / bool), index-aligned with the
-        inputs.
+        Returns ``(wr, n_blocks, ema_w, fp_out, noc, infeasible_buf,
+        w_overflow, stream, feasible)`` arrays (int64 / bool), index-aligned
+        with the inputs.
         """
         raise NotImplementedError
 
@@ -289,12 +309,12 @@ class _BatchedFinishExecutor(Executor):
         glb = np.array([a.glb_bytes for a in accs], dtype=np.int64)
         wbuf = np.array([a.wbuf_bytes for a in accs], dtype=np.int64)
         shared = np.array([a.shared for a in accs], dtype=bool)
-        share = np.maximum(
-            np.array([a.weight_share_cores for a in accs], dtype=np.int64), 1)
+        # construction validates weight_share_cores >= 1, no clamp needed
+        share = np.array([a.weight_share_cores for a in accs], dtype=np.int64)
 
-        (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow, stream,
-         feasible) = self._finish_arrays(fp, w_total, single, glb, wbuf,
-                                         shared, share)
+        (wr, n_blocks, ema_w, fp_out, noc, infeasible_buf, w_overflow,
+         stream, feasible) = self._finish_arrays(fp, w_total, single, glb,
+                                                 wbuf, shared, share)
 
         for j, i in enumerate(vec_idx):
             st = sts[j]
@@ -317,6 +337,7 @@ class _BatchedFinishExecutor(Executor):
                 weight_resident=int(wr[j]),
                 glb_access_bytes=st.glb_access_bytes,
                 wbuf_access_bytes=int(wr[j]),
+                noc_bytes=int(noc[j]),
                 feasible=bool(feasible[j]),
                 reason=reason,
             )
@@ -349,7 +370,10 @@ class VectorExecutor(_BatchedFinishExecutor):
         fp_out = np.where(stream, np.minimum(fp, glb_cap), fp)
         w_overflow = ~shared & ~single & ~infeasible_buf & (wr > wbuf_cap)
         feasible = ~(infeasible_buf | w_overflow)
-        return (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow,
+        # §5.4.2 NoC charge, mirroring finish_cost: every DRAM-loaded weight
+        # byte crosses the fabric to the share - 1 peer cores
+        noc = (share - 1) * ema_w
+        return (wr, n_blocks, ema_w, fp_out, noc, infeasible_buf, w_overflow,
                 stream, feasible)
 
 

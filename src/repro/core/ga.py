@@ -49,7 +49,8 @@ from .partition import (
 # metrics that are additive over subgraphs: plan.metric(m) equals the sum
 # of single-subgraph contributions, which is what the additive recurrences
 # of the dp/enum baselines require.  "bandwidth" (a time-weighted
-# percentile) is not additive — see Objective.decomposition().
+# percentile) and the NoC profile metrics ("noc_p95"/"noc_link_peak") are
+# not additive — see Objective.decomposition().
 ADDITIVE_METRICS: Tuple[str, ...] = ("ema", "energy", "latency")
 
 
@@ -76,12 +77,13 @@ class Objective:
         """The objective the additive-DP baselines (dp/enum) decompose by.
 
         Their recurrences sum per-subgraph costs, which is exact only for
-        additive metrics.  For the non-additive ``bandwidth`` percentile
-        they decompose by the additive ``ema`` surrogate — the byte count
-        the bandwidth requirement derives from — and the caller scores the
-        returned plan with the *true* objective (so ``ExploreResult.cost``
-        is always the real metric, never the surrogate).  Whole-plan
-        strategies (ga/sa/greedy/two_step) optimize every metric directly.
+        additive metrics.  For the non-additive profile percentiles
+        (``bandwidth``, ``noc_p95``, ``noc_link_peak``) they decompose by
+        the additive ``ema`` surrogate — the byte count the bandwidth/NoC
+        requirements derive from — and the caller scores the returned plan
+        with the *true* objective (so ``ExploreResult.cost`` is always the
+        real metric, never the surrogate).  Whole-plan strategies
+        (ga/sa/greedy/two_step) optimize every metric directly.
         """
         if self.is_additive:
             return self
@@ -96,32 +98,58 @@ class Objective:
 
 @dataclass(frozen=True)
 class HWSpace:
-    """Memory design space (paper §5.3.1)."""
+    """Memory design space (paper §5.3.1).
+
+    ``core_candidates`` adds an optional third genome axis (§5.4.2): the
+    multi-core weight-sharing degree.  When non-empty, ``sample``/``blend``/
+    ``mutate`` co-explore the core count (applied to both
+    ``weight_share_cores`` and ``n_cores``) jointly with the buffer split
+    and the partition; when empty (the default) the core count is pinned to
+    ``base`` and no rng draw is spent on it, so pre-existing seeded searches
+    are bitwise-unchanged.
+    """
 
     mode: str = "fixed"             # "fixed" | "separate" | "shared"
     base: AcceleratorConfig = field(default_factory=AcceleratorConfig)
     glb_candidates: Tuple[int, ...] = tuple(GLB_CANDIDATES)
     wbuf_candidates: Tuple[int, ...] = tuple(WBUF_CANDIDATES)
     shared_candidates: Tuple[int, ...] = tuple(SHARED_CANDIDATES)
+    core_candidates: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        if any(n < 1 for n in self.core_candidates):
+            raise ValueError(
+                f"core_candidates must all be >= 1, got "
+                f"{self.core_candidates}")
+
+    def _with_cores(self, acc: AcceleratorConfig,
+                    n: int) -> AcceleratorConfig:
+        if (acc.weight_share_cores, acc.n_cores) == (n, n):
+            return acc
+        return replace(acc, weight_share_cores=n, n_cores=n)
 
     def sample(self, rng: random.Random) -> AcceleratorConfig:
         if self.mode == "fixed":
-            return self.base
-        if self.mode == "separate":
-            return replace(
+            acc = self.base
+        elif self.mode == "separate":
+            acc = replace(
                 self.base,
                 glb_bytes=rng.choice(self.glb_candidates),
                 wbuf_bytes=rng.choice(self.wbuf_candidates),
                 shared=False,
             )
-        if self.mode == "shared":
-            return replace(
+        elif self.mode == "shared":
+            acc = replace(
                 self.base,
                 glb_bytes=rng.choice(self.shared_candidates),
                 wbuf_bytes=0,
                 shared=True,
             )
-        raise ValueError(self.mode)
+        else:
+            raise ValueError(self.mode)
+        if self.core_candidates:
+            acc = self._with_cores(acc, rng.choice(self.core_candidates))
+        return acc
 
     @staticmethod
     def _snap(value: float, cands: Sequence[int]) -> int:
@@ -131,39 +159,51 @@ class HWSpace:
               rng: random.Random) -> AcceleratorConfig:
         """Crossover of HW genes: average, snapped to the grid (§4.4.2)."""
         if self.mode == "fixed":
-            return self.base
-        if self.mode == "separate":
-            return replace(
+            acc = self.base
+        elif self.mode == "separate":
+            acc = replace(
                 a,
                 glb_bytes=self._snap((a.glb_bytes + b.glb_bytes) / 2,
                                      self.glb_candidates),
                 wbuf_bytes=self._snap((a.wbuf_bytes + b.wbuf_bytes) / 2,
                                       self.wbuf_candidates),
             )
-        return replace(
-            a,
-            glb_bytes=self._snap((a.glb_bytes + b.glb_bytes) / 2,
-                                 self.shared_candidates),
-        )
+        else:
+            acc = replace(
+                a,
+                glb_bytes=self._snap((a.glb_bytes + b.glb_bytes) / 2,
+                                     self.shared_candidates),
+            )
+        if self.core_candidates:
+            acc = self._with_cores(acc, self._snap(
+                (a.weight_share_cores + b.weight_share_cores) / 2,
+                self.core_candidates))
+        return acc
 
     def mutate(self, acc: AcceleratorConfig, rng: random.Random,
                sigma_steps: float = 3.0) -> AcceleratorConfig:
         """mutation-DSE: normal perturbation around the current value (§4.4.3)."""
-        if self.mode == "fixed":
-            return self.base
 
         def perturb(value: int, cands: Sequence[int]) -> int:
             step = cands[1] - cands[0] if len(cands) > 1 else 1
             return self._snap(rng.gauss(value, sigma_steps * step), cands)
 
-        if self.mode == "separate":
-            return replace(
+        if self.mode == "fixed":
+            out = self.base
+        elif self.mode == "separate":
+            out = replace(
                 acc,
                 glb_bytes=perturb(acc.glb_bytes, self.glb_candidates),
                 wbuf_bytes=perturb(acc.wbuf_bytes, self.wbuf_candidates),
             )
-        return replace(acc,
-                       glb_bytes=perturb(acc.glb_bytes, self.shared_candidates))
+        else:
+            out = replace(
+                acc,
+                glb_bytes=perturb(acc.glb_bytes, self.shared_candidates))
+        if self.core_candidates:
+            out = self._with_cores(out, perturb(
+                acc.weight_share_cores, self.core_candidates))
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,14 @@ def _finish_masks(fp, wr, w_total, single, glb, wbuf, shared,
     return ema_w, fp_out, infeasible_buf, w_overflow, stream, feasible
 
 
+def _noc_bytes(share, ema_w):
+    """§5.4.2 NoC charge, mirroring ``finish_cost``: every DRAM-loaded
+    weight byte crosses the fabric to the ``share - 1`` peer cores.  The
+    engine's guards bound ``share * w_total`` below ``2**31``, so the
+    product stays int64-safe even for a streamed ``ema_w``."""
+    return (share - 1) * ema_w
+
+
 @jax.jit
 def _finish_jnp(fp, w_total, single, glb, wbuf, shared, share):
     """Whole-batch ``finish_cost`` arithmetic as one jitted jnp expression."""
@@ -80,8 +88,8 @@ def _finish_jnp(fp, w_total, single, glb, wbuf, shared, share):
     (ema_w, fp_out, infeasible_buf, w_overflow, stream,
      feasible) = _finish_masks(fp, wr, w_total, single, glb, wbuf, shared,
                                n_blocks)
-    return (wr, n_blocks, ema_w, fp_out, infeasible_buf, w_overflow, stream,
-            feasible)
+    return (wr, n_blocks, ema_w, fp_out, _noc_bytes(share, ema_w),
+            infeasible_buf, w_overflow, stream, feasible)
 
 
 def _stream_blocks_kernel(fp_ref, glb_ref, wr_ref,
@@ -125,8 +133,8 @@ def _finish_pallas(fp, w_total, single, glb, wbuf, shared, share,
     # the mask algebra re-selects from the kernel's unconditional results
     ema_w = jnp.where(stream, emaw_stream, ema_w)
     fp_out = jnp.where(stream, fp_cap, fp_out)
-    return (wr, nb, ema_w, fp_out, infeasible_buf, w_overflow, stream,
-            feasible)
+    return (wr, nb, ema_w, fp_out, _noc_bytes(share, ema_w),
+            infeasible_buf, w_overflow, stream, feasible)
 
 
 def _pad_pow2(arr: np.ndarray, fill) -> np.ndarray:
@@ -147,7 +155,7 @@ def finish_cost_batch(fp, w_total, single, glb, wbuf, shared, share,
 
     Inputs are index-aligned equal-length arrays (int64 values, bool
     masks); every lane must already satisfy the engine's scalar-fallback
-    guards.  Returns ``(wr, n_blocks, ema_w, fp_out, infeasible_buf,
+    guards.  Returns ``(wr, n_blocks, ema_w, fp_out, noc, infeasible_buf,
     w_overflow, stream, feasible)`` as NumPy arrays, bit-identical to the
     scalar kernel and to :class:`repro.core.engine.VectorExecutor`.
     """
@@ -155,7 +163,7 @@ def finish_cost_batch(fp, w_total, single, glb, wbuf, shared, share,
     if n == 0:
         empty_i = np.zeros(0, dtype=np.int64)
         empty_b = np.zeros(0, dtype=bool)
-        return (empty_i,) * 4 + (empty_b,) * 4
+        return (empty_i,) * 5 + (empty_b,) * 4
     # pad to the next power of two: neutral lanes (glb/share=1 avoids any
     # divide-by-zero path) that the element-wise arithmetic cannot couple
     # into real lanes

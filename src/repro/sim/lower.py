@@ -64,6 +64,10 @@ class SubgraphProgram:
     footprint: int                   # analytical activation footprint
     region_count: Optional[int]      # RegionTable entries (None: streamed)
     region_table_bytes: Optional[int]
+    # §5.4.2 weight broadcast over the core-to-core fabric: every DRAM-
+    # loaded weight byte reaches the weight_share_cores - 1 peer cores
+    # (== the analytical cost's noc_bytes; zero on a single core)
+    noc_bytes: int = 0
 
     @property
     def n_steps(self) -> int:
@@ -183,7 +187,9 @@ def lower_subgraph(
         weight_first=brk.weight_first, weight_stream=brk.weight_stream,
         stream_blocks=brk.stream_blocks, peak_occ_act=occ.peak_bytes,
         footprint=sc.footprint, region_count=region_count,
-        region_table_bytes=region_bytes)
+        region_table_bytes=region_bytes,
+        noc_bytes=(acc.weight_share_cores - 1)
+        * (brk.weight_first + brk.weight_stream))
 
 
 def lower_plan(

@@ -2,11 +2,18 @@
 
 Executes a lowered plan (:mod:`repro.sim.lower`) on a single timeline:
 
-* a **prologue** step loads the first subgraph's resident weights,
+* a **prologue** loads the first subgraph's first weights — one explicit
+  per-core DRAM stream segment per ``weight_share_cores`` core (§5.4.2),
 * each subgraph runs its elementary operations in schedule order; while it
   computes, the *next* subgraph's first weight load streams in underneath
   (the paper's double-buffered weight prefetch, Fig. 3),
-* single-layer block sweeps re-stream their weights at block boundaries.
+* single-layer block sweeps re-stream their weights at block boundaries,
+* on a multi-core plan every DRAM-loaded weight byte is additionally
+  broadcast to the ``weight_share_cores - 1`` peer cores over the NoC
+  fabric (``noc_bytes`` rides on the step that loads the byte — the fabric
+  is concurrent with the DRAM link, so it adds traffic, not time), and
+  weight-buffer occupancy tracks the *per-core* residency
+  (``weight_resident``), not the full weight bytes.
 
 Time base: each subgraph's steps are scaled so their durations sum to the
 analytical subgraph latency ``max(compute, IO)`` — the simulator is a
@@ -32,9 +39,13 @@ from .bandwidth import DEFAULT_PERCENTILES, BandwidthProfile, \
 from .lower import _even_split, lower_plan
 
 TRACE_FORMAT = "cocco-trace"
-TRACE_FORMAT_VERSION = 1
+# v2: multi-core lowering — per-step/per-subgraph ``noc_bytes``, per-core
+# prologue DRAM streams (``core``), and a top-level ``noc`` section with
+# aggregate + per-link fabric profiles
+TRACE_FORMAT_VERSION = 2
 
 PROLOGUE = -1   # TraceStep.subgraph index of the initial weight load
+WHOLE_CHIP = -1  # TraceStep.core for steps not tied to one core's stream
 
 
 @dataclass(frozen=True)
@@ -49,9 +60,11 @@ class TraceStep:
     act_out: int         # activation bytes stored
     w_in: int            # weight bytes loaded (prefetch + stream)
     occ_act: int         # activation-buffer bytes resident at step end
-    occ_w: int           # weight-buffer bytes resident at step end
+    occ_w: int           # weight-buffer bytes resident at step end (per core)
     rows: int = 0
     macs: int = 0
+    noc_bytes: int = 0   # weight bytes broadcast over the core-to-core fabric
+    core: int = WHOLE_CHIP  # owning core of a per-core DRAM stream segment
 
     @property
     def dram_in(self) -> int:
@@ -84,6 +97,7 @@ class SubgraphTrafficSummary:
     footprint: int
     region_count: Optional[int]
     region_table_bytes: Optional[int]
+    noc_bytes: int = 0   # broadcast bytes of this subgraph's own weights
 
     @property
     def dram_bytes(self) -> int:
@@ -119,6 +133,27 @@ class TrafficTrace:
     def total_cycles(self) -> float:
         return sum(s.cycles for s in self.steps)
 
+    @property
+    def total_noc_bytes(self) -> int:
+        return sum(s.noc_bytes for s in self.steps)
+
+    def noc_profile(
+        self, percentiles: Sequence[float] = DEFAULT_PERCENTILES,
+        links: int = 1,
+    ) -> BandwidthProfile:
+        """NoC-fabric requirement profile: aggregate (``links=1``) or
+        per-link (``links=weight_share_cores`` — the rotation fabric is
+        symmetric, so each link carries ``1/links`` of a step's broadcast
+        bytes).  The prologue broadcast is excluded from the statistics but
+        counts toward totals, mirroring :meth:`bandwidth_profile`."""
+        def scaled(b):
+            return b if links <= 1 else b / links
+        return profile_from_steps(
+            ((scaled(s.noc_bytes), s.cycles) for s in self.steps
+             if s.subgraph >= 0),
+            self.acc.freq_hz, percentiles,
+            totals=(scaled(self.total_noc_bytes), self.total_cycles))
+
     def bandwidth_profile(
         self, percentiles: Sequence[float] = DEFAULT_PERCENTILES,
     ) -> BandwidthProfile:
@@ -146,9 +181,17 @@ class TrafficTrace:
                 "dram_in": self.total_dram_in,
                 "dram_out": self.total_dram_out,
                 "dram_bytes": self.total_dram_bytes,
+                "noc_bytes": self.total_noc_bytes,
                 "cycles": self.total_cycles,
             },
             "profile": self.bandwidth_profile().to_dict(),
+            "noc": {
+                "links": self.acc.weight_share_cores,
+                "total_bytes": self.total_noc_bytes,
+                "aggregate": self.noc_profile().to_dict(),
+                "per_link": self.noc_profile(
+                    links=self.acc.weight_share_cores).to_dict(),
+            },
             "subgraphs": [asdict(sg) for sg in self.subgraphs],
         }
         if include_steps:
@@ -187,7 +230,9 @@ def _coalesce(steps: List[TraceStep], limit: int) -> List[TraceStep]:
             w_in=sum(c.w_in for c in chunk),
             occ_act=chunk[-1].occ_act, occ_w=chunk[-1].occ_w,
             rows=sum(c.rows for c in chunk),
-            macs=sum(c.macs for c in chunk)))
+            macs=sum(c.macs for c in chunk),
+            noc_bytes=sum(c.noc_bytes for c in chunk),
+            core=chunk[0].core))
         start = end
     return out
 
@@ -212,24 +257,41 @@ def simulate_plan(
                                 kernel=kernel)
     freq = acc.freq_hz
     bpc = acc.dram_bytes_per_cycle
+    share = acc.weight_share_cores
 
     steps: List[TraceStep] = []
     summaries: List[SubgraphTrafficSummary] = []
     t = 0.0
 
-    # prologue: the first subgraph's resident weights load before compute
+    # prologue: the first subgraph's first weight load streams before any
+    # compute — one explicit DRAM stream segment per core (§5.4.2: each
+    # core pulls its own shard of the load; single-core plans keep the one
+    # step of the v1 schema).  Weight occupancy is *per core*: it climbs by
+    # cumulative integer scaling to exactly the per-core residency the
+    # analytical kernel charges (``weight_resident``), not the full weight
+    # bytes.  Every loaded byte is broadcast to the share - 1 peer cores.
     first0 = programs[0].weight_first
+    resident0 = programs[0].cost.weight_resident
     if first0 > 0:
-        cyc = first0 / bpc
-        steps.append(TraceStep(subgraph=PROLOGUE, step=0, t_cycles=t,
-                               cycles=cyc, act_in=0, act_out=0, w_in=first0,
-                               occ_act=0, occ_w=first0))
-        t += cyc
+        cum = 0
+        for c, shard in enumerate(_even_split(first0, share)):
+            if shard <= 0:
+                continue
+            cum += shard
+            cyc = shard / bpc
+            steps.append(TraceStep(
+                subgraph=PROLOGUE, step=c, t_cycles=t, cycles=cyc,
+                act_in=0, act_out=0, w_in=shard, occ_act=0,
+                occ_w=(cum * resident0) // first0,
+                noc_bytes=(share - 1) * shard, core=c))
+            t += cyc
 
     for i, prog in enumerate(programs):
         n = prog.n_steps
         nxt_first = (programs[i + 1].weight_first
                      if i + 1 < len(programs) else 0)
+        nxt_resident = (programs[i + 1].cost.weight_resident
+                        if i + 1 < len(programs) else 0)
         prefetch = _even_split(nxt_first, n)
         # raw per-step demand: max(compute, IO); then scale so the subgraph
         # occupies exactly its analytical latency on the timeline
@@ -247,19 +309,26 @@ def simulate_plan(
             # analytical latency evenly so the timeline still spans it
             durations = [lat / n] * n
 
-        own_w = prog.cost.weight_resident     # resident block of own weights
+        own_w = prog.cost.weight_resident     # per-core resident own weights
         pre_cum = 0
         sub_steps: List[TraceStep] = []
         sub_t = t
         for k, stp in enumerate(prog.steps):
             pre_cum += prefetch[k]
             cyc = durations[k]
+            w_in = stp.w_stream + prefetch[k]
+            # prefetched weights occupy each core at its per-core share of
+            # the next subgraph's residency (cumulative integer scaling
+            # lands exactly on nxt_resident when the prefetch completes)
+            occ_pre = ((pre_cum * nxt_resident) // nxt_first
+                       if nxt_first > 0 else 0)
             sub_steps.append(TraceStep(
                 subgraph=i, step=k, t_cycles=sub_t, cycles=cyc,
                 act_in=stp.act_in, act_out=stp.act_out,
-                w_in=stp.w_stream + prefetch[k],
-                occ_act=stp.occ_act, occ_w=own_w + pre_cum,
-                rows=stp.rows, macs=stp.macs))
+                w_in=w_in,
+                occ_act=stp.occ_act, occ_w=own_w + occ_pre,
+                rows=stp.rows, macs=stp.macs,
+                noc_bytes=(share - 1) * w_in))
             sub_t += cyc
         if steps_per_subgraph is not None:
             sub_steps = _coalesce(sub_steps, max(1, steps_per_subgraph))
@@ -273,10 +342,11 @@ def simulate_plan(
             stream_blocks=prog.stream_blocks,
             cycles=lat, n_steps=len(sub_steps),
             peak_occ_act=prog.peak_occ_act,
-            peak_occ_w=own_w + nxt_first,
+            peak_occ_w=own_w + nxt_resident,
             footprint=prog.footprint,
             region_count=prog.region_count,
-            region_table_bytes=prog.region_table_bytes))
+            region_table_bytes=prog.region_table_bytes,
+            noc_bytes=prog.noc_bytes))
 
     return TrafficTrace(
         graph_name=g.name, acc=acc,

@@ -6,7 +6,11 @@ every feasible plan the two must agree exactly:
 * per subgraph, simulated DRAM bytes (external loads, output stores,
   weight first-load + re-streaming) equal the kernel's
   ``ema_in`` / ``ema_out`` / ``ema_w``,
-* the plan's simulated total equals ``PlanCost.ema_total`` byte-for-byte,
+* per subgraph, simulated NoC broadcast bytes equal the kernel's §5.4.2
+  charge ``noc_bytes`` (and the step-level fabric traffic sums to the
+  same total),
+* the plan's simulated totals equal ``PlanCost.ema_total`` /
+  ``PlanCost.noc_total`` byte-for-byte,
 * the timeline's total duration equals ``PlanCost.latency_cycles`` plus
   the weight prologue (floating-point, checked to relative 1e-9).
 
@@ -40,22 +44,27 @@ class SubgraphCheck:
     ema_out_simulated: int
     ema_w_analytical: int
     ema_w_simulated: int
+    noc_analytical: int = 0
+    noc_simulated: int = 0
 
     @property
     def ok(self) -> bool:
         return (self.ema_in_analytical == self.ema_in_simulated
                 and self.ema_out_analytical == self.ema_out_simulated
-                and self.ema_w_analytical == self.ema_w_simulated)
+                and self.ema_w_analytical == self.ema_w_simulated
+                and self.noc_analytical == self.noc_simulated)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "index": self.index, "nodes": list(self.nodes), "ok": self.ok,
             "analytical": {"in": self.ema_in_analytical,
                            "out": self.ema_out_analytical,
-                           "w": self.ema_w_analytical},
+                           "w": self.ema_w_analytical,
+                           "noc": self.noc_analytical},
             "simulated": {"in": self.ema_in_simulated,
                           "out": self.ema_out_simulated,
-                          "w": self.ema_w_simulated},
+                          "w": self.ema_w_simulated,
+                          "noc": self.noc_simulated},
         }
 
 
@@ -68,10 +77,13 @@ class CrossValidationReport:
     total_simulated: int
     latency_analytical: float       # PlanCost.latency_cycles
     latency_simulated: float        # trace total minus the weight prologue
+    noc_analytical: int = 0         # PlanCost.noc_total (§5.4.2 charge)
+    noc_simulated: int = 0          # step-level fabric traffic sum
 
     @property
     def bytes_ok(self) -> bool:
         return (self.total_analytical == self.total_simulated
+                and self.noc_analytical == self.noc_simulated
                 and all(c.ok for c in self.checks))
 
     @property
@@ -88,6 +100,8 @@ class CrossValidationReport:
             "ok": self.ok,
             "total_analytical_bytes": self.total_analytical,
             "total_simulated_bytes": self.total_simulated,
+            "noc_analytical_bytes": self.noc_analytical,
+            "noc_simulated_bytes": self.noc_simulated,
             "latency_analytical_cycles": self.latency_analytical,
             "latency_simulated_cycles": self.latency_simulated,
             "subgraphs": [c.to_dict() for c in self.checks],
@@ -95,9 +109,11 @@ class CrossValidationReport:
 
     def summary(self) -> str:
         if self.ok:
+            noc = (f" + NoC {self.noc_simulated} B"
+                   if self.noc_simulated else "")
             return (f"cross-validation OK: simulated DRAM bytes == "
                     f"analytical EMA ({self.total_simulated} B over "
-                    f"{len(self.checks)} subgraphs)")
+                    f"{len(self.checks)} subgraphs{noc})")
         bad = [c.index for c in self.checks if not c.ok]
         return (f"cross-validation FAILED: simulated {self.total_simulated} "
                 f"B vs analytical {self.total_analytical} B "
@@ -126,6 +142,8 @@ def cross_validate_trace(trace: TrafficTrace,
             ema_out_analytical=sc.ema_out, ema_out_simulated=sg.act_out,
             ema_w_analytical=sc.ema_w,
             ema_w_simulated=sg.w_first + sg.w_stream,
+            noc_analytical=sc.noc_bytes,
+            noc_simulated=sg.noc_bytes,
         )
         for i, (sc, sg) in enumerate(zip(plan.subgraphs, trace.subgraphs))
     ]
@@ -136,6 +154,10 @@ def cross_validate_trace(trace: TrafficTrace,
         total_simulated=sum(sg.dram_bytes for sg in trace.subgraphs),
         latency_analytical=plan.latency_cycles,
         latency_simulated=trace.total_cycles - prologue,
+        # step-level fabric traffic (incl. the prologue broadcast) must sum
+        # to the same §5.4.2 charge the per-subgraph checks compare
+        noc_analytical=plan.noc_total,
+        noc_simulated=trace.total_noc_bytes,
     )
 
 

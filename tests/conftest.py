@@ -10,6 +10,18 @@ pytest puts this directory on ``sys.path`` (rootdir insertion, no
 from repro.core import Graph
 
 
+def pytest_configure(config):
+    # Regression guard for the jax-after-fork class of bugs: CPython warns
+    # (and jax can deadlock) when a process pool forks a process that
+    # already imported the multithreaded jax runtime.  The engine's pools
+    # switch to the forkserver start method once jax is loaded
+    # (repro.core.engine.pool_mp_context), so any reappearance of this
+    # warning is a real bug — fail loudly instead of scrolling by.
+    config.addinivalue_line(
+        "filterwarnings",
+        "error:os\\.fork\\(\\) was called:RuntimeWarning")
+
+
 def small_graph():
     """An 8-node two-diamond graph."""
     g = Graph("dd")

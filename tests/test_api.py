@@ -101,6 +101,21 @@ def test_spec_json_roundtrip_exact():
     assert ExploreSpec.from_json(spec.to_json()) == spec
 
 
+def test_spec_core_candidates_roundtrip_and_stable_serialization():
+    spec = ExploreSpec(
+        workload="resnet50",
+        hw=HWSpace(mode="shared", core_candidates=(1, 2, 4)),
+    )
+    rt = ExploreSpec.from_json(spec.to_json())
+    assert rt == spec
+    assert rt.hw.core_candidates == (1, 2, 4)
+    # the default (un-explored) core axis is omitted from the JSON, so the
+    # spec_key addresses of every pre-core-axis artifact stay valid
+    plain = ExploreSpec(workload="resnet50", hw=HWSpace(mode="shared"))
+    assert "core_candidates" not in plain.to_dict()["hw"]
+    assert ExploreSpec.from_json(plain.to_json()) == plain
+
+
 @pytest.mark.parametrize("strategy", ALL_STRATEGIES)
 def test_spec_roundtrip_every_strategy_defaults(strategy):
     spec = ExploreSpec(workload="vgg16", strategy=strategy)

@@ -174,6 +174,46 @@ def test_process_executor_matches_serial():
     assert [asdict(c) for c in got] == [asdict(c) for c in want]
 
 
+def test_pool_context_avoids_forking_a_jax_parent():
+    """Once jax is imported, process pools must not use the raw ``fork``
+    start method: jax's at-fork hook warns (and the runtime can deadlock).
+    ``pool_mp_context`` switches to ``forkserver``; with no jax in the
+    process it keeps the platform default."""
+    import sys
+
+    from repro.core.engine import pool_mp_context
+
+    ctx = pool_mp_context()
+    if "jax" in sys.modules:
+        assert ctx.get_start_method() == "forkserver"
+    else:
+        import multiprocessing as mp
+
+        assert ctx.get_start_method() == mp.get_context().get_start_method()
+
+
+def test_process_executor_is_fork_warning_clean_with_jax_loaded():
+    """End-to-end regression for the `os.fork() ... JAX is multithreaded`
+    RuntimeWarning: spin up a real worker pool after importing jax (skips
+    when jax is absent).  Needs > 2*jobs distinct queries so the executor
+    actually spawns workers instead of evaluating inline."""
+    import warnings
+
+    pytest.importorskip("jax")
+    g = small_graph()
+    queries = random_queries(g, n_parts=3, seed=5)
+    assert len(queries) > 2
+    ex = ProcessExecutor(jobs=1)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", RuntimeWarning)
+            got = ex.evaluate(CostKernel(g), queries)
+    finally:
+        ex.close()
+    want = SerialExecutor().evaluate(CostKernel(g), queries)
+    assert [asdict(c) for c in got] == [asdict(c) for c in want]
+
+
 def test_make_executor_resolution():
     assert isinstance(make_executor(None, 1), SerialExecutor)
     ex = make_executor(None, 3)
@@ -237,6 +277,26 @@ def test_fallback_guard_boundary_sizes_2_31():
     assert needs_scalar_fallback(replace(ok, weight_total=edge), acc)
     # schedule failures always take the scalar path (reason strings)
     assert needs_scalar_fallback(replace(ok, sched_error="no schedule"), acc)
+
+
+def test_fallback_guard_boundary_noc_product():
+    """The §5.4.2 broadcast charge multiplies weight bytes by the share
+    count, so the guard scales with ``weight_share_cores``: the product
+    falls back at exactly 2**31 (bounding the int64 noc term well below
+    2**62)."""
+    edge = 1 << 31
+    acc4 = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB,
+                             weight_share_cores=4, n_cores=4)
+    ok = SubgraphStructure(nodes=(0,), footprint=KB,
+                           weight_total=edge // 4 - 1)
+    assert not needs_scalar_fallback(ok, acc4)
+    assert needs_scalar_fallback(
+        replace(ok, weight_total=edge // 4), acc4)
+    # a single core keeps the original weight_total boundary
+    acc1 = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
+    assert not needs_scalar_fallback(
+        replace(ok, weight_total=edge - 1), acc1)
+    assert needs_scalar_fallback(replace(ok, weight_total=edge), acc1)
 
 
 @pytest.mark.parametrize("backend,jobs", backend_params())

@@ -38,25 +38,40 @@ WORKLOADS = {
 
 # case key -> (strategy, options, sample_budget).  ``ga_full`` mirrors the
 # paper's generation shape (population 64, 20 generations) so the batched
-# executors are pinned on generation-sized miss batches too.
+# executors are pinned on generation-sized miss batches too.  ``ga_noc``
+# is the multi-core case: a weight-sharing base config, the GA co-exploring
+# the core axis (HWSpace.core_candidates), and the trace-derived
+# ``noc_p95`` objective — pinning the §5.4.2 NoC charge across backends.
 STRATEGIES = {
     "ga": ("ga", GAOptions(population=10), 300),
     "greedy": ("greedy", GreedyOptions(eval_budget=2_000), 300),
     "ga_full": ("ga", GAOptions(population=64), 1_280),
+    "ga_noc": ("ga", GAOptions(population=10), 300),
 }
 
 CASES = [(w, s) for w in WORKLOADS for s in ("ga", "greedy")]
 CASES += [("synthetic_layered24", "ga_full")]
+CASES += [("synthetic_layered24", "ga_noc")]
 
 
 def golden_spec(workload_key: str, strategy_key: str) -> ExploreSpec:
     acc = AcceleratorConfig(glb_bytes=128 * KB, wbuf_bytes=144 * KB)
     strategy, options, budget = STRATEGIES[strategy_key]
+    objective = Objective(metric="ema", alpha=None)
+    hw = HWSpace(mode="fixed", base=acc)
+    if strategy_key == "ga_noc":
+        objective = Objective(metric="noc_p95", alpha=0.002)
+        hw = HWSpace(
+            mode="shared",
+            base=AcceleratorConfig(shared=True, weight_share_cores=2,
+                                   n_cores=2),
+            core_candidates=(2, 4),
+        )
     return ExploreSpec(
         workload=WORKLOADS[workload_key],
         strategy=strategy,
-        objective=Objective(metric="ema", alpha=None),
-        hw=HWSpace(mode="fixed", base=acc),
+        objective=objective,
+        hw=hw,
         sample_budget=budget,
         seed=0,
         options=options,

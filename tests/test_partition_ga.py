@@ -1,6 +1,7 @@
 """Partition validity, GA operators (paper §4.4), and search behaviour."""
 
 import random
+from dataclasses import replace
 
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -104,6 +105,52 @@ def test_ga_co_explore_returns_grid_capacity():
     assert res.best.acc.shared
     assert res.best.acc.glb_bytes in SHARED_CANDIDATES
     assert res.best.plan.feasible
+
+
+def test_ga_co_explores_core_axis():
+    g = small_graph()
+    hw = HWSpace(mode="shared",
+                 base=AcceleratorConfig(shared=True, weight_share_cores=2,
+                                        n_cores=2),
+                 core_candidates=(2, 4))
+    res = run_ga(g, Objective(metric="energy", alpha=0.002), hw,
+                 sample_budget=400, population=20, seed=1)
+    assert res.best.acc.weight_share_cores in (2, 4)
+    assert res.best.acc.n_cores == res.best.acc.weight_share_cores
+    assert res.best.plan.feasible
+    # the §5.4.2 broadcast charge is live in the searched objective
+    assert res.best.plan.noc_total == sum(
+        (res.best.acc.weight_share_cores - 1) * s.ema_w
+        for s in res.best.plan.subgraphs)
+
+
+def test_hwspace_core_ops_stay_inside_candidates():
+    rng = random.Random(11)
+    hw = HWSpace(mode="separate", core_candidates=(1, 2, 4))
+    for _ in range(50):
+        a, b = hw.sample(rng), hw.sample(rng)
+        assert a.weight_share_cores in hw.core_candidates
+        child = hw.blend(a, b, rng)
+        assert child.weight_share_cores in hw.core_candidates
+        mutant = hw.mutate(child, rng)
+        assert mutant.weight_share_cores in hw.core_candidates
+    with pytest.raises(ValueError, match="core_candidates"):
+        HWSpace(core_candidates=(0, 2))
+
+
+def test_empty_core_candidates_preserve_rng_stream():
+    """The default () core axis must not draw from the rng, so existing
+    seeded searches stay bitwise-identical."""
+    base, cored = HWSpace(mode="separate"), \
+        HWSpace(mode="separate", core_candidates=(2,))
+    r1, r2 = random.Random(7), random.Random(7)
+    a1, a2 = base.sample(r1), cored.sample(r2)
+    assert a1 == replace(a2, weight_share_cores=1, n_cores=a1.n_cores)
+    # after identical work, the un-cored space left the rng untouched by
+    # the core axis: next draws agree with a fresh clone
+    r3 = random.Random(7)
+    base.sample(r3)
+    assert r1.getstate() == r3.getstate()
 
 
 def test_ga_history_monotone():
