@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Validate a telemetry export against the ``cocco-telemetry`` schema.
+
+Stdlib-only (runs in CI without the package on the path)::
+
+    python scripts/check_telemetry_schema.py runs/telemetry.json
+
+The file is the Chrome/Perfetto Trace Event Format's JSON object flavor
+(``{"traceEvents": [...]}``) as written by ``python -m repro explore
+--telemetry`` and ``python -m repro trace --perfetto`` — the same bytes
+ui.perfetto.dev opens.  Checks the envelope (self-describing
+``format``/``version`` keys, microsecond ``displayTimeUnit``), each
+event's phase-specific contract ("X" complete events need non-negative
+``ts``/``dur``, "C" counters need numeric args, "M" metadata must be a
+process/thread name), and that the export is non-trivial (at least one
+duration event).  Importable: ``validate_telemetry_dict(doc)`` returns a
+list of error strings (empty == valid), which ``tests/test_obs.py``
+reuses.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List
+
+TELEMETRY_FORMAT = "cocco-telemetry"
+TELEMETRY_FORMAT_VERSIONS = (1,)
+
+_PHASES = {"X", "C", "M"}
+_META_NAMES = {"process_name", "thread_name"}
+
+
+def _num(x: Any) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _check_event(ev: Any, i: int, errs: List[str]) -> str:
+    """Validate one trace event; returns its phase ('' when broken)."""
+    where = f"traceEvents[{i}]"
+    if not isinstance(ev, dict):
+        errs.append(f"{where} must be an object")
+        return ""
+    ph = ev.get("ph")
+    if ph not in _PHASES:
+        errs.append(f"{where}.ph must be one of {sorted(_PHASES)}")
+        return ""
+    if not isinstance(ev.get("name"), str) or not ev["name"]:
+        errs.append(f"{where}.name must be a non-empty string")
+    if not isinstance(ev.get("pid"), int):
+        errs.append(f"{where}.pid must be an int")
+    args = ev.get("args")
+    if ph == "M":
+        if ev["name"] not in _META_NAMES:
+            errs.append(f"{where}: metadata name must be one of "
+                        f"{sorted(_META_NAMES)}")
+        if not isinstance(args, dict) or \
+                not isinstance(args.get("name"), str):
+            errs.append(f"{where}.args.name must be a string label")
+        return ph
+    if not isinstance(ev.get("tid"), int):
+        errs.append(f"{where}.tid must be an int")
+    if not _num(ev.get("ts")) or ev.get("ts", -1) < 0:
+        errs.append(f"{where}.ts must be a non-negative number (us)")
+    if ph == "X":
+        if not _num(ev.get("dur")) or ev.get("dur", -1) < 0:
+            errs.append(f"{where}.dur must be a non-negative number (us)")
+        if args is not None and not isinstance(args, dict):
+            errs.append(f"{where}.args must be an object when present")
+    else:  # "C"
+        if not isinstance(args, dict) or not args:
+            errs.append(f"{where}.args must be a non-empty object")
+        elif not all(_num(v) for v in args.values()):
+            errs.append(f"{where}.args values must all be numeric")
+    return ph
+
+
+def validate_telemetry_dict(doc: Any) -> List[str]:
+    """Full-document validation; returns error strings (empty == valid)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document must be a JSON object"]
+    if doc.get("format") != TELEMETRY_FORMAT:
+        errs.append(f"format must be {TELEMETRY_FORMAT!r}")
+    if doc.get("version") not in TELEMETRY_FORMAT_VERSIONS:
+        errs.append(f"version must be one of {TELEMETRY_FORMAT_VERSIONS}")
+    if doc.get("displayTimeUnit") not in ("ms", "ns"):
+        errs.append("displayTimeUnit must be 'ms' or 'ns'")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        errs.append("traceEvents must be a non-empty list")
+        return errs
+    counts: Dict[str, int] = {ph: 0 for ph in _PHASES}
+    for i, ev in enumerate(events):
+        ph = _check_event(ev, i, errs)
+        if ph:
+            counts[ph] += 1
+        if len(errs) > 20:
+            errs.append("... (further errors suppressed)")
+            return errs
+    if counts["X"] == 0:
+        errs.append("export has no 'X' duration events — empty timeline")
+    counters = doc.get("counters")
+    if counters is not None:
+        if not isinstance(counters, dict) or \
+                not all(_num(v) for v in counters.values()):
+            errs.append("counters must map names to numbers")
+    meta = doc.get("meta")
+    if meta is not None and not isinstance(meta, dict):
+        errs.append("meta must be an object")
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    path = argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        print(f"error: cannot read {path}: {err}", file=sys.stderr)
+        return 1
+    errs = validate_telemetry_dict(doc)
+    if errs:
+        for e in errs:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        print(f"{path}: INVALID ({len(errs)} errors)", file=sys.stderr)
+        return 1
+    events = doc["traceEvents"]
+    n_x = sum(1 for ev in events if ev.get("ph") == "X")
+    n_c = sum(1 for ev in events if ev.get("ph") == "C")
+    kind = (doc.get("meta") or {}).get("kind", "unknown")
+    print(f"{path}: valid {TELEMETRY_FORMAT} v{doc['version']} "
+          f"({kind}) — {n_x} duration events, {n_c} counter samples")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -12,9 +12,12 @@ bandwidth profile is internally ordered (p50 <= p95 <= p99 <= peak), and
 the embedded cross-validation verdict (if present) agrees with the
 totals.  Version 2 adds the NoC fabric contract (per-step ``noc_bytes`` /
 ``core``, a top-level ``noc`` section with aggregate and per-link
-profiles); version-1 documents (no NoC fields) are still accepted.
-Importable: ``validate_trace_dict(doc)`` returns a list of error strings
-(empty == valid), which `tests/test_cli.py` reuses.
+profiles).  Version 3 adds per-tensor occupancy timelines: every step
+carries ``occ_tensors`` ([tensor id, bytes] pairs summing exactly to
+``occ_act``; empty on prologue/weight-only steps).  Version-1/-2
+documents are still accepted.  Importable: ``validate_trace_dict(doc)``
+returns a list of error strings (empty == valid), which
+`tests/test_cli.py` reuses.
 """
 
 from __future__ import annotations
@@ -24,7 +27,7 @@ import sys
 from typing import Any, Dict, List
 
 TRACE_FORMAT = "cocco-trace"
-TRACE_FORMAT_VERSIONS = (1, 2)
+TRACE_FORMAT_VERSIONS = (1, 2, 3)
 
 _TOP_KEYS = {"format", "version", "graph", "acc", "out_tile", "groups",
              "totals", "profile", "subgraphs"}
@@ -40,6 +43,8 @@ _STEP_KEYS = {"subgraph", "step", "t_cycles", "cycles", "act_in", "act_out",
 # v2 additions (NoC fabric traffic + per-core attribution)
 _SUBGRAPH_KEYS_V2 = _SUBGRAPH_KEYS | {"noc_bytes"}
 _STEP_KEYS_V2 = _STEP_KEYS | {"noc_bytes", "core"}
+# v3 additions (per-tensor occupancy timelines)
+_STEP_KEYS_V3 = _STEP_KEYS_V2 | {"occ_tensors"}
 _NOC_KEYS = {"links", "total_bytes", "aggregate", "per_link"}
 
 
@@ -79,8 +84,10 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
         errs.append(f"unsupported version {version!r}")
         return errs
     v2 = version >= 2
+    v3 = version >= 3
     sub_keys = _SUBGRAPH_KEYS_V2 if v2 else _SUBGRAPH_KEYS
-    step_keys = _STEP_KEYS_V2 if v2 else _STEP_KEYS
+    step_keys = (_STEP_KEYS_V3 if v3
+                 else _STEP_KEYS_V2 if v2 else _STEP_KEYS)
 
     totals = doc["totals"]
     total_keys = _TOTAL_KEYS | ({"noc_bytes"} if v2 else set())
@@ -184,6 +191,29 @@ def validate_trace_dict(doc: Dict[str, Any]) -> List[str]:
                 else:
                     errs.append(f"steps[{i}].{k} must be a "
                                 f"non-negative integer")
+            if v3:
+                occ_t = stp.get("occ_tensors")
+                if not isinstance(occ_t, list):
+                    errs.append(f"steps[{i}].occ_tensors must be a list")
+                    continue
+                total = 0
+                shape_ok = True
+                for pair in occ_t:
+                    if (not isinstance(pair, list) or len(pair) != 2
+                            or not isinstance(pair[0], int)
+                            or not isinstance(pair[1], int)
+                            or isinstance(pair[0], bool)
+                            or isinstance(pair[1], bool)
+                            or pair[0] < 0 or pair[1] <= 0):
+                        errs.append(f"steps[{i}].occ_tensors entries must "
+                                    f"be [tensor >= 0, bytes > 0] pairs")
+                        shape_ok = False
+                        break
+                    total += pair[1]
+                if shape_ok and isinstance(stp.get("occ_act"), int) \
+                        and total != stp["occ_act"]:
+                    errs.append(f"steps[{i}]: sum(occ_tensors bytes) "
+                                f"!= occ_act")
         if isinstance(totals, dict) and not (_TOTAL_KEYS - set(totals)):
             if sums["act_in"] + sums["w_in"] != totals["dram_in"]:
                 errs.append("sum of step loads != totals.dram_in")

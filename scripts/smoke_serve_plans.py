@@ -10,7 +10,10 @@ acceptance behaviour of the plan service end to end over HTTP:
 3. N concurrent *misses* of one new spec perform exactly one search —
    ``/stats`` reports ``dedup_joins == N-1`` and ``searches`` grew by 1;
 4. every response carries identical result bytes for identical specs, and
-   ``/stats`` matches the request history (requests/hits/misses add up).
+   ``/stats`` matches the request history (requests/hits/misses add up);
+5. ``GET /metrics`` serves parseable Prometheus text whose per-tier
+   request histograms agree with the /stats ledger, and whose counters
+   are monotone across scrapes.
 
 Exit 0 on success; nonzero with a diagnostic on any violation.  Usage::
 
@@ -33,7 +36,25 @@ sys.path.insert(0, str(SRC))
 
 from repro.api import ExploreSpec  # noqa: E402
 from repro.core import HWSpace, Objective  # noqa: E402
-from repro.serve.plans import fetch_stats, request_plan  # noqa: E402
+from repro.serve.plans import (  # noqa: E402
+    fetch_metrics,
+    fetch_stats,
+    request_plan,
+)
+
+
+def parse_metrics(text: str) -> dict:
+    """Parse Prometheus text exposition into {name{labels}: value}."""
+    out = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        try:
+            key, raw = line.rsplit(" ", 1)
+            out[key] = float(raw)
+        except ValueError:
+            fail(f"unparseable /metrics line: {line!r}")
+    return out
 
 
 def spec_for(seed: int) -> ExploreSpec:
@@ -124,6 +145,36 @@ def main() -> int:
             fail(f"/stats requests={stats['requests']}, expected {2 + n}")
         if stats["store_hits"] < 1 or stats["errors"] != 0:
             fail(f"unexpected /stats counters: {stats}")
+        # 5: /metrics agrees with /stats and is monotone across scrapes
+        m1 = parse_metrics(fetch_metrics(url))
+        if m1["repro_plan_requests_total"] != stats["requests"]:
+            fail(f"/metrics requests_total={m1['repro_plan_requests_total']}"
+                 f" != /stats requests={stats['requests']}")
+        # the search-tier histogram counts *responses* served by the
+        # search path (dedup joiners included), not searches executed
+        n_search_served = (stats["requests"] - stats["store_hits"]
+                           - stats["zoo_hits"])
+        for tier, want in (("store", stats["store_hits"]),
+                           ("search", n_search_served)):
+            got = m1[f'repro_plan_request_latency_seconds_count'
+                     f'{{tier="{tier}"}}']
+            if got != want:
+                fail(f"/metrics latency histogram count for {tier!r} is "
+                     f"{got}, /stats says {want}")
+        extra = request_plan(url, spec_for(seed=0))
+        if extra["served_from"] != "store":
+            fail("warm re-request no longer hits the store")
+        m2 = parse_metrics(fetch_metrics(url))
+        regressed = [k for k, v in m1.items()
+                     if "_total" in k or "_count" in k or "_bucket" in k
+                     if m2.get(k, -1) < v]
+        if regressed:
+            fail(f"/metrics counters went backwards: {regressed}")
+        if m2["repro_plan_requests_total"] != m1[
+                "repro_plan_requests_total"] + 1:
+            fail("requests_total did not advance across scrapes")
+        print(f"metrics OK: {len(m1)} samples, counters monotone")
+
         print("smoke OK:", json.dumps({k: stats[k] for k in
               ("requests", "searches", "store_hits", "dedup_joins")}))
         return 0

@@ -234,10 +234,34 @@ def cmd_explore(args: argparse.Namespace) -> int:
     spec = _spec_from_args(args)
     _maybe_save(args.save_spec, spec.to_json(indent=2))
     store = _store_from_args(args)
-    res = run(spec, store=store, eval_backend=args.eval_backend,
-              eval_jobs=args.eval_jobs, profile=args.profile,
-              struct_cache_dir=args.struct_cache_dir)
+    rec = None
+    if args.telemetry:
+        from repro.obs import Recorder, recording
+
+        rec = Recorder()
+        with recording(rec):
+            res = run(spec, store=store, eval_backend=args.eval_backend,
+                      eval_jobs=args.eval_jobs, profile=args.profile,
+                      struct_cache_dir=args.struct_cache_dir)
+    else:
+        res = run(spec, store=store, eval_backend=args.eval_backend,
+                  eval_jobs=args.eval_jobs, profile=args.profile,
+                  struct_cache_dir=args.struct_cache_dir)
     print(res.summary())
+    if rec is not None:
+        from repro.obs import (
+            chrome_trace_doc,
+            recorder_events,
+            write_chrome_trace,
+        )
+
+        doc = chrome_trace_doc(
+            recorder_events(rec), counters=rec.counters,
+            meta={"kind": "search", "workload": spec.workload,
+                  "strategy": spec.strategy, "seed": spec.seed})
+        write_chrome_trace(args.telemetry, doc)
+        print(f"  telemetry written to {args.telemetry} "
+              f"({len(rec.spans)} spans; open in ui.perfetto.dev)")
     if res.history:
         print(f"  converged: cost {res.history[0][1]:.4g} -> "
               f"{res.history[-1][1]:.4g} over {res.samples} samples "
@@ -440,6 +464,23 @@ def cmd_trace(args: argparse.Namespace) -> int:
                     trace.to_json(meta=meta,
                                   include_steps=not args.no_steps) + "\n")
         print(f"  trace written to {args.out}")
+    if args.perfetto:
+        from repro.obs import chrome_trace_doc, traffic_events, \
+            write_chrome_trace
+
+        doc = chrome_trace_doc(
+            traffic_events(trace),
+            meta={"kind": "traffic", "workload": workload,
+                  "strategy": strategy, "seed": seed})
+        write_chrome_trace(args.perfetto, doc)
+        print(f"  perfetto timeline written to {args.perfetto} "
+              f"(open in ui.perfetto.dev)")
+    if args.plot:
+        from repro.sim.plot import plot_bandwidth
+
+        plot_bandwidth(trace, args.plot,
+                       title=f"{workload}[{strategy}]: bandwidth over time")
+        print(f"  bandwidth plot written to {args.plot}")
     if not report.ok:
         raise RuntimeError(report.summary())
     return 0
@@ -675,6 +716,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="print a search profile: wall time, "
                          "derive_schedule seconds, and structure-cache "
                          "hit/miss counters (raw / canonical / disk)")
+    pe.add_argument("--telemetry", metavar="PATH",
+                    help="record the search's span tree + counters and "
+                         "write a Chrome/Perfetto trace-event JSON here "
+                         "(open in ui.perfetto.dev; results are identical "
+                         "with or without recording)")
     pe.set_defaults(fn=cmd_explore)
 
     pc = sub.add_parser("compare",
@@ -709,6 +755,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     ptr.add_argument("--no-steps", action="store_true",
                      help="omit the per-step timeline from --out JSON "
                           "(totals, profile, and per-subgraph rows stay)")
+    ptr.add_argument("--perfetto", metavar="PATH",
+                     help="write the timeline as Chrome/Perfetto "
+                          "trace-event JSON (steps as duration events on "
+                          "per-core tracks, DRAM/NoC bytes as counter "
+                          "tracks; open in ui.perfetto.dev)")
+    ptr.add_argument("--plot", metavar="PATH",
+                     help="render a bandwidth-over-time plot (PNG/SVG by "
+                          "extension; needs the optional matplotlib "
+                          "dependency)")
     ptr.set_defaults(fn=cmd_trace)
 
     pw = sub.add_parser("workloads",

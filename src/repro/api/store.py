@@ -54,6 +54,8 @@ from typing import Dict, Iterator, List, Optional, Tuple, Union
 
 import hashlib
 
+from repro.obs import recorder as obs
+
 from .result import RESULT_VERSION, ExploreResult
 from .spec import ExploreSpec
 
@@ -202,6 +204,7 @@ class ResultStore:
             payload = path.read_bytes()
         except OSError:
             self.misses += 1
+            obs.add("result_store.miss")
             return None
         try:
             d = json.loads(payload)
@@ -219,8 +222,10 @@ class ResultStore:
             self._quarantine(path, reason="stored spec != requested spec",
                              expected_payload=payload)
             self.misses += 1
+            obs.add("result_store.miss")
             return None
         self.hits += 1
+        obs.add("result_store.hit")
         return result
 
     def put(self, spec: ExploreSpec, result: ExploreResult) -> Path:
@@ -249,6 +254,7 @@ class ResultStore:
                 pass
             raise
         self.writes += 1
+        obs.add("result_store.write")
         return path
 
     # -- cross-process locking --------------------------------------------

@@ -19,8 +19,8 @@ from __future__ import annotations
 import contextvars
 import math
 import os
-import time
 from concurrent.futures import ProcessPoolExecutor, as_completed
+from contextlib import nullcontext
 from dataclasses import replace
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
 
@@ -34,6 +34,7 @@ from repro.core.baselines import (
 from repro.core.cost import CachedEvaluator, PlanCost, SubgraphCost
 from repro.core.ga import SearchResult, run_ga
 from repro.core.graph import Graph
+from repro.obs import recorder as obs
 
 from .registry import get_strategy, list_strategies, register_strategy
 from .result import ExploreResult
@@ -160,8 +161,13 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             if (g_check is None
                     or cached.meta.get("graph_sha")
                     in (None, graph_fingerprint(g_check))):
+                obs.add("store.hit")
                 return cached
-    g = graph if graph is not None else build_workload(spec.workload)
+    if graph is not None:
+        g = graph
+    else:
+        with obs.span("resolve-workload", workload=spec.workload):
+            g = build_workload(spec.workload)
     created_ev = ev is None
     if created_ev:
         ev = _make_evaluator(g, spec.out_tile, eval_backend, eval_jobs,
@@ -176,27 +182,39 @@ def run(spec: ExploreSpec, graph: Optional[Graph] = None,
             f"strategy {spec.strategy!r} expects options of type "
             f"{entry.options_cls.__name__}, got {type(options).__name__}"
         )
+    # ``--profile`` is a thin view over the telemetry recorder: with no
+    # ambient recorder installed, profiling brings its own (the strategy
+    # span's duration *is* the reported wall time).  Telemetry never touches
+    # the result — the profile dict is attached after the store write, and
+    # counter deltas flow only into the recorder side-channel.
+    rec = obs.current()
+    if profile and not rec.enabled:
+        rec = obs.Recorder()
     token = _ACTIVE_STORE.set(store if use_store else None)
-    counters_before = ev.counters() if profile else None
-    t_start = time.perf_counter() if profile else 0.0
+    counters_before = ev.counters() if rec.enabled else None
     try:
-        with ev.count_run() as touched:
+        with ev.count_run() as touched, \
+                (obs.recording(rec) if rec.enabled else nullcontext()), \
+                rec.span(f"strategy:{spec.strategy}",
+                         workload=spec.workload, strategy=spec.strategy,
+                         budget=spec.sample_budget, seed=spec.seed) as sp:
             result = entry.fn(spec, options, g, ev, **runtime)
     finally:
         _ACTIVE_STORE.reset(token)
         if created_ev:
             ev.close()  # release executor pools; the cache dies with ev
-    wall_s = time.perf_counter() - t_start
     result.evaluations = len(touched)
     result.spec = spec
     result.meta.setdefault("graph", g.name)
     result.meta.setdefault("graph_sha", graph_fingerprint(g))
     if use_store:
         store.put(spec, result)
-    if profile:
+    if rec.enabled:
         prof = _counters_delta(counters_before, ev.counters())
-        prof["wall_s"] = wall_s
-        result.meta["profile"] = prof
+        rec.merge_counters(prof, prefix="evaluator.")
+        if profile:
+            prof["wall_s"] = sp.dur_s
+            result.meta["profile"] = prof
     return result
 
 

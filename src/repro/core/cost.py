@@ -40,6 +40,8 @@ from typing import (
     Tuple,
 )
 
+from repro.obs import recorder as obs
+
 from .graph import FULL, Graph
 from .memory import subgraph_footprint
 from .tiling import derive_schedule
@@ -808,7 +810,10 @@ class CachedEvaluator:
                 miss_keys.append(key)
                 miss_queries.append((fs, acc))
         if miss_queries:
-            costs = self.executor.evaluate(self.kernel, miss_queries)
+            with obs.span("evaluate_batch", queries=len(queries),
+                          misses=len(miss_queries),
+                          backend=self.executor.name):
+                costs = self.executor.evaluate(self.kernel, miss_queries)
             # every miss counts as one true cost-model invocation, whichever
             # executor computed it — so run_ga/run_sa report the same
             # ``evaluations`` under every backend; ``merged`` stays reserved

@@ -44,6 +44,8 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import fields as dataclass_fields
 from typing import List, Optional, Sequence, Tuple
 
+from repro.obs import recorder as obs
+
 from .cost import (
     STREAM_REASON,
     AcceleratorConfig,
@@ -236,9 +238,13 @@ class ProcessExecutor(Executor):
                 accs.append(acc)
             compact.append((tuple(nodes), ai))
         n_shards = min(self.jobs, len(queries))
-        futures = [pool.submit(_worker_eval, accs, compact[i::n_shards])
-                   for i in range(n_shards)]
-        outs = [f.result() for f in futures]
+        rec = obs.current()
+        with rec.span("executor.submit", backend=self.name,
+                      shards=n_shards, queries=len(queries)):
+            futures = [pool.submit(_worker_eval, accs, compact[i::n_shards])
+                       for i in range(n_shards)]
+        with rec.span("executor.join", backend=self.name):
+            outs = [f.result() for f in futures]
         results: List[Optional[SubgraphCost]] = [None] * len(queries)
         for s, (shard_out, canon_wire) in enumerate(outs):
             for j, vals in enumerate(shard_out):
@@ -298,6 +304,9 @@ class _BatchedFinishExecutor(Executor):
                 results[i] = finish_cost(st, acc)  # scalar fallback
             else:
                 vec_idx.append(i)
+        n_fallback = len(queries) - len(vec_idx)
+        if n_fallback:
+            obs.add("engine.scalar_fallback", n_fallback)
         if not vec_idx:
             return results  # type: ignore[return-value]
 

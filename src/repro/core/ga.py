@@ -31,6 +31,8 @@ from .cost import (
     CachedEvaluator,
     PlanCost,
 )
+from repro.obs import recorder as obs
+
 from .graph import Graph
 from .partition import (
     groups_of,
@@ -344,6 +346,22 @@ class SearchResult:
     evaluations: int
 
 
+def _emit_generation_telemetry(rec, best: "Genome",
+                               evaluated: Sequence["Genome"],
+                               pop: Sequence["Genome"]) -> None:
+    """Per-generation convergence samples on an *enabled* recorder only —
+    the disabled path never pays for the diversity signature scan."""
+    if best is not None and math.isfinite(best.cost):
+        rec.sample("ga.best_cost", best.cost)
+    finite = [ind.cost for ind in evaluated if math.isfinite(ind.cost)]
+    if finite:
+        rec.sample("ga.mean_cost", sum(finite) / len(finite))
+    # population diversity: fraction of distinct partition schemes
+    sigs = {tuple(sorted(tuple(sorted(s)) for s in ind.groups))
+            for ind in pop}
+    rec.sample("ga.diversity", len(sigs) / max(len(pop), 1))
+
+
 def evaluate_genomes(g: Graph, genomes: Sequence[Genome], obj: Objective,
                      ev: CachedEvaluator) -> None:
     """Batched genome evaluation: collect → submit → apply.
@@ -405,55 +423,65 @@ def run_ga(
     pop_log: List[List[Tuple[int, float, float]]] = []
     best: Optional[Genome] = None
 
-    evaluate_genomes(g, pop, objective, ev)
+    rec = obs.current()
+    with rec.span("ga.generation", gen=0, population=len(pop)):
+        evaluate_genomes(g, pop, objective, ev)
     for ind in pop:
         samples += 1
         if best is None or ind.cost < best.cost:
             best = ind.clone()
             best.cost, best.plan = ind.cost, ind.plan
         history.append((samples, best.cost))
+    if rec.enabled:
+        _emit_generation_telemetry(rec, best, pop, pop)
 
+    gen = 0
     while samples < sample_budget:
-        # --- variation -------------------------------------------------
-        offspring: List[Genome] = []
-        n_children = population
-        for _ in range(n_children):
-            if rng.random() < crossover_frac and len(pop) >= 2:
-                mom, dad = rng.sample(pop, 2)
-                child = crossover(g, mom, dad, hw, rng)
-                if rng.random() < 0.5:
-                    child = mutate(g, child, hw, rng)
-            else:
-                child = mutate(g, rng.choice(pop), hw, rng)
-            offspring.append(child)
+        gen += 1
+        with rec.span("ga.generation", gen=gen, samples=samples):
+            # --- variation ---------------------------------------------
+            offspring: List[Genome] = []
+            n_children = population
+            for _ in range(n_children):
+                if rng.random() < crossover_frac and len(pop) >= 2:
+                    mom, dad = rng.sample(pop, 2)
+                    child = crossover(g, mom, dad, hw, rng)
+                    if rng.random() < 0.5:
+                        child = mutate(g, child, hw, rng)
+                else:
+                    child = mutate(g, rng.choice(pop), hw, rng)
+                offspring.append(child)
 
-        # --- evaluation: one engine batch per generation ----------------
-        # the budget cap is known up front (evaluation spends one sample per
-        # child), so truncating *before* the batch reproduces the serial
-        # early-break exactly
-        evaluated = offspring[: sample_budget - samples]
-        evaluate_genomes(g, evaluated, objective, ev)
-        for ind in evaluated:
-            samples += 1
-            if ind.cost < best.cost:
-                best = ind.clone()
-                best.cost, best.plan = ind.cost, ind.plan
-            history.append((samples, best.cost))
+            # --- evaluation: one engine batch per generation ------------
+            # the budget cap is known up front (evaluation spends one
+            # sample per child), so truncating *before* the batch
+            # reproduces the serial early-break exactly
+            evaluated = offspring[: sample_budget - samples]
+            evaluate_genomes(g, evaluated, objective, ev)
+            for ind in evaluated:
+                samples += 1
+                if ind.cost < best.cost:
+                    best = ind.clone()
+                    best.cost, best.plan = ind.cost, ind.plan
+                history.append((samples, best.cost))
 
-        # --- tournament selection over parents + offspring --------------
-        pool = pop + evaluated
-        new_pop: List[Genome] = sorted(pool, key=lambda i: i.cost)[:elite]
-        while len(new_pop) < population:
-            contenders = rng.sample(pool, min(tournament_k, len(pool)))
-            new_pop.append(min(contenders, key=lambda i: i.cost))
-        pop = new_pop
-        if log_populations:
-            pop_log.append([
-                (float(i.acc.buf_size_total),
-                 float(i.plan.metric(objective.metric)) if i.plan else math.inf,
-                 i.cost)
-                for i in pop
-            ])
+            # --- tournament selection over parents + offspring ----------
+            pool = pop + evaluated
+            new_pop: List[Genome] = sorted(pool, key=lambda i: i.cost)[:elite]
+            while len(new_pop) < population:
+                contenders = rng.sample(pool, min(tournament_k, len(pool)))
+                new_pop.append(min(contenders, key=lambda i: i.cost))
+            pop = new_pop
+            if log_populations:
+                pop_log.append([
+                    (float(i.acc.buf_size_total),
+                     float(i.plan.metric(objective.metric))
+                     if i.plan else math.inf,
+                     i.cost)
+                    for i in pop
+                ])
+        if rec.enabled:
+            _emit_generation_telemetry(rec, best, evaluated, pop)
 
     return SearchResult(best=best, history=history, population_log=pop_log,
                         samples=samples, evaluations=ev.evaluations)

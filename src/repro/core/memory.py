@@ -168,6 +168,15 @@ class OccupancyTracker:
             for t, rows in self.filled.items()
         )
 
+    def resident_by_tensor(self) -> Dict[int, int]:
+        """Per-tensor resident bytes (sums exactly to ``resident_bytes`` —
+        the trace v3 ``occ_tensors`` timeline source)."""
+        return {
+            t: min(rows, self.caps_rows.get(t, rows))
+            * self.line_bytes.get(t, 0)
+            for t, rows in self.filled.items()
+        }
+
 
 def build_region_table(
     g: Graph,

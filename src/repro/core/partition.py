@@ -16,6 +16,8 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.obs import recorder as obs
+
 from .cost import AcceleratorConfig, PlanCost, evaluate_partition, evaluate_subgraph
 from .graph import Graph
 
@@ -182,10 +184,12 @@ def split_to_fit_batch(
     for _ in range(max_rounds):
         if not active:
             break
+        obs.add("repair.rounds")
         queries = [(s, items[i][1]) for i in active
                    for s in groups_of_item[i] if len(s) > 1]
         costs = ev.evaluate_batch(queries)
         pos = 0
+        n_splits = 0
         still_active: List[int] = []
         for i in active:
             changed = False
@@ -201,11 +205,14 @@ def split_to_fit_batch(
                 else:
                     new.extend(split_group_topo(g, s, pieces=2))
                     changed = True
+                    n_splits += 1
             groups_of_item[i] = new
             if changed:
                 still_active.append(i)
             else:
                 out[i] = normalize(g, new)
+        if n_splits:
+            obs.add("repair.splits", n_splits)
         active = still_active
     for i in active:  # max_rounds exhausted: fall back to singletons
         out[i] = normalize(g, [{v} for s in groups_of_item[i] for v in s])

@@ -1,0 +1,56 @@
+"""Unified telemetry: spans + counters + exporters (docs/observability.md).
+
+One substrate for every layer's runtime visibility:
+
+* :mod:`repro.obs.recorder` — the ambient :class:`Recorder` (nested
+  spans, counters, timed samples) with a near-zero disabled path.
+* :mod:`repro.obs.perfetto` — Chrome/Perfetto trace-event JSON export of
+  a recorder or a sim ``TrafficTrace``.
+* :mod:`repro.obs.metrics` — Prometheus-style histograms and the text
+  exposition the plan server's ``/metrics`` endpoint serves.
+
+The hard invariant: telemetry is side-channel only.  Results and stored
+artifacts are byte-identical whether a recorder is installed or not.
+"""
+
+from .metrics import DEFAULT_LATENCY_BUCKETS, Histogram, render_metrics
+from .perfetto import (
+    TELEMETRY_FORMAT,
+    TELEMETRY_FORMAT_VERSION,
+    chrome_trace_doc,
+    recorder_events,
+    traffic_events,
+    write_chrome_trace,
+)
+from .recorder import (
+    NullRecorder,
+    Recorder,
+    Span,
+    add,
+    current,
+    enabled,
+    recording,
+    sample,
+    span,
+)
+
+__all__ = [
+    "DEFAULT_LATENCY_BUCKETS",
+    "Histogram",
+    "render_metrics",
+    "TELEMETRY_FORMAT",
+    "TELEMETRY_FORMAT_VERSION",
+    "chrome_trace_doc",
+    "recorder_events",
+    "traffic_events",
+    "write_chrome_trace",
+    "NullRecorder",
+    "Recorder",
+    "Span",
+    "add",
+    "current",
+    "enabled",
+    "recording",
+    "sample",
+    "span",
+]

@@ -19,7 +19,9 @@ Cross-process safety comes from :meth:`ResultStore.exclusive`: a search
 first takes the per-key lockfile, re-checks the store (another process may
 have won), and only then searches — so N identical requests across threads
 *and* processes perform exactly one search.  All counters (hits, misses,
-dedup joins, per-tier latency) are exposed at ``GET /stats``.
+dedup joins, per-tier latency) are exposed at ``GET /stats`` (JSON) and
+``GET /metrics`` (Prometheus text exposition; per-tier latency
+histograms from :mod:`repro.obs.metrics`).
 
 Protocol (JSON over HTTP, stdlib ``ThreadingHTTPServer`` — no new deps):
 
@@ -31,6 +33,8 @@ Protocol (JSON over HTTP, stdlib ``ThreadingHTTPServer`` — no new deps):
   get ``500``.
 * ``GET /stats`` — server + store + zoo counters (schema in
   ``docs/serving.md``).
+* ``GET /metrics`` — the same counters as Prometheus text format 0.0.4
+  (reference table in ``docs/observability.md``).
 * ``GET /healthz`` — liveness probe, ``{"ok": true}``.
 
 See ``docs/serving.md`` for the full protocol and the zoo layout.
@@ -41,11 +45,11 @@ from __future__ import annotations
 import json
 import threading
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 from urllib import request as _urlrequest
 
 from repro.api.result import ExploreResult
@@ -53,6 +57,7 @@ from repro.api.spec import ExploreSpec
 from repro.api.store import ResultStore, graph_fingerprint, spec_key
 from repro.api.strategies import run
 from repro.api.workloads import build_workload, workload_is_stable
+from repro.obs.metrics import Histogram, render_metrics
 
 PROTOCOL_VERSION = 1
 
@@ -112,39 +117,6 @@ def resolve_plan(spec: ExploreSpec,
         res = search(spec)
         store.put(spec, res)
     return res, "search"
-
-
-# ---------------------------------------------------------------------------
-# metrics
-# ---------------------------------------------------------------------------
-
-class _LatencyWindow:
-    """Latency aggregate per served_from tier: count/mean/max plus p50/p95
-    over a sliding window of the most recent samples."""
-
-    def __init__(self, window: int = 512) -> None:
-        self.count = 0
-        self.total = 0.0
-        self.max = 0.0
-        self.recent: deque = deque(maxlen=window)
-
-    def record(self, ms: float) -> None:
-        self.count += 1
-        self.total += ms
-        self.max = max(self.max, ms)
-        self.recent.append(ms)
-
-    def snapshot(self) -> Dict[str, float]:
-        if not self.count:
-            return {"count": 0, "mean_ms": 0.0, "max_ms": 0.0,
-                    "p50_ms": 0.0, "p95_ms": 0.0}
-        ordered = sorted(self.recent)
-        q = lambda f: ordered[min(len(ordered) - 1, int(f * len(ordered)))]
-        return {"count": self.count,
-                "mean_ms": round(self.total / self.count, 3),
-                "max_ms": round(self.max, 3),
-                "p50_ms": round(q(0.50), 3),
-                "p95_ms": round(q(0.95), 3)}
 
 
 # ---------------------------------------------------------------------------
@@ -220,8 +192,11 @@ class PlanService:
         self.zoo_hits = 0
         self.dedup_joins = 0
         self.errors = 0
-        self._latency = {tier: _LatencyWindow()
-                        for tier in ("zoo", "store", "search")}
+        # per-tier cumulative latency histograms (seconds, repro.obs) —
+        # they replace the old sliding _LatencyWindow, so quantiles no
+        # longer forget samples past a 512-entry deque
+        self._latency = {tier: Histogram()
+                         for tier in ("zoo", "store", "search")}
 
     # -- request path -----------------------------------------------------
     def plan(self, spec: ExploreSpec) -> PlanResponse:
@@ -313,15 +288,15 @@ class PlanService:
 
     def _done(self, result: ExploreResult, key: str, source: str,
               deduped: bool, t0: float) -> PlanResponse:
-        ms = (time.perf_counter() - t0) * 1e3
+        dt = time.perf_counter() - t0
         with self._lock:
             if source == "zoo":
                 self.zoo_hits += 1
             elif source == "store":
                 self.store_hits += 1
-            self._latency[source].record(ms)
+            self._latency[source].observe(dt)
         return PlanResponse(result=result, key=key, served_from=source,
-                            deduped=deduped, latency_ms=ms)
+                            deduped=deduped, latency_ms=dt * 1e3)
 
     # -- introspection ----------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -339,8 +314,8 @@ class PlanService:
                 "errors": self.errors,
                 "in_flight": len(self._inflight),
                 "warm_evaluators": len(self._evaluators),
-                "latency_ms": {tier: w.snapshot()
-                               for tier, w in self._latency.items()},
+                "latency_ms": {tier: h.snapshot_ms()
+                               for tier, h in self._latency.items()},
             }
         return {
             "ok": True,
@@ -348,6 +323,75 @@ class PlanService:
             "store": self.store.counters(),
             "zoo": self.zoo.counters() if self.zoo is not None else None,
         }
+
+    def metrics_text(self) -> str:
+        """The ``GET /metrics`` document: Prometheus text format 0.0.4.
+
+        Same counters as :meth:`stats`, but in the standard exposition
+        so any Prometheus-compatible scraper can poll the server; the
+        per-tier latency *histograms* carry the full distribution (the
+        JSON view only shows interpolated p50/p95).
+        """
+        # store counters walk the artifact directory — gather them before
+        # taking the service lock
+        tiers: List[Tuple[str, ResultStore]] = [("store", self.store)]
+        if self.zoo is not None:
+            tiers.append(("zoo", self.zoo))
+        store_counts = [(name, st.counters()) for name, st in tiers]
+        with self._lock:
+            lab = lambda tier: {"tier": tier}
+            served: List[Tuple[Optional[Mapping[str, str]], object]] = [
+                (lab("zoo"), self.zoo_hits),
+                (lab("store"), self.store_hits),
+                (lab("search"), self.searches),
+            ]
+            families = [
+                ("repro_plan_requests_total", "counter",
+                 "Plan requests received.", [(None, self.requests)]),
+                ("repro_plan_served_total", "counter",
+                 "Plan responses by serving tier.", served),
+                ("repro_plan_request_latency_seconds", "histogram",
+                 "Plan request latency by serving tier.",
+                 [(lab(t), h) for t, h in self._latency.items()]),
+                ("repro_plan_dedup_joins_total", "counter",
+                 "Requests that joined an in-flight identical search.",
+                 [(None, self.dedup_joins)]),
+                ("repro_plan_errors_total", "counter",
+                 "Plan requests that raised.", [(None, self.errors)]),
+                ("repro_plan_inflight_searches", "gauge",
+                 "Searches currently in flight (dedup table size).",
+                 [(None, len(self._inflight))]),
+                ("repro_plan_warm_evaluators", "gauge",
+                 "Warm evaluators resident in the LRU.",
+                 [(None, len(self._evaluators))]),
+                ("repro_plan_warm_evaluators_limit", "gauge",
+                 "Warm-evaluator LRU capacity.",
+                 [(None, self.max_warm_evaluators)]),
+                ("repro_plan_workers", "gauge",
+                 "Search worker pool size.", [(None, self.workers)]),
+                ("repro_plan_uptime_seconds", "gauge",
+                 "Seconds since the service started.",
+                 [(None, round(time.time() - self.started, 3))]),
+            ]
+            for metric, mtype, help_text in (
+                    ("repro_store_hits_total", "counter", "Store hits."),
+                    ("repro_store_misses_total", "counter",
+                     "Store misses."),
+                    ("repro_store_writes_total", "counter",
+                     "Store writes."),
+                    ("repro_store_quarantined_total", "counter",
+                     "Artifacts quarantined on load."),
+                    ("repro_store_entries", "gauge",
+                     "Artifacts currently in the store."),
+                    ("repro_store_bytes", "gauge",
+                     "Bytes of artifacts currently in the store."),
+            ):
+                key = metric.replace("repro_store_", "").replace(
+                    "_total", "")
+                families.append((metric, mtype, help_text, [
+                    (lab(name), counts[key])
+                    for name, counts in store_counts]))
+            return render_metrics(families)
 
     def close(self) -> None:
         self._closed = True
@@ -377,8 +421,12 @@ class _PlanRequestHandler(BaseHTTPRequestHandler):
 
     def _send(self, code: int, doc: Dict[str, Any]) -> None:
         payload = json.dumps(doc).encode()
+        self._send_raw(code, payload, "application/json")
+
+    def _send_raw(self, code: int, payload: bytes,
+                  content_type: str) -> None:
         self.send_response(code)
-        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(payload)))
         self.end_headers()
         self.wfile.write(payload)
@@ -387,6 +435,9 @@ class _PlanRequestHandler(BaseHTTPRequestHandler):
         path = self.path.rstrip("/") or "/"
         if path == "/stats":
             self._send(200, self.service.stats())
+        elif path == "/metrics":
+            self._send_raw(200, self.service.metrics_text().encode(),
+                           "text/plain; version=0.0.4; charset=utf-8")
         elif path == "/healthz":
             self._send(200, {"ok": True})
         elif path == "/":
@@ -399,6 +450,7 @@ class _PlanRequestHandler(BaseHTTPRequestHandler):
                                   "{ok, key, served_from, deduped, "
                                   "latency_ms, result}",
                     "GET /stats": "server + store + zoo counters",
+                    "GET /metrics": "Prometheus text-format counters",
                     "GET /healthz": "liveness probe",
                 },
             })
@@ -485,3 +537,10 @@ def fetch_stats(url: str, timeout: float = 30.0) -> Dict[str, Any]:
     with _urlrequest.urlopen(url.rstrip("/") + "/stats",
                              timeout=timeout) as resp:
         return json.loads(resp.read().decode())
+
+
+def fetch_metrics(url: str, timeout: float = 30.0) -> str:
+    """GET a running plan server's ``/metrics`` text exposition."""
+    with _urlrequest.urlopen(url.rstrip("/") + "/metrics",
+                             timeout=timeout) as resp:
+        return resp.read().decode()

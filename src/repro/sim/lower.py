@@ -48,6 +48,9 @@ class StepTraffic:
     macs: int            # MACs issued this step
     rows: int            # internal rows produced this step
     occ_act: int         # activation-buffer bytes resident at step end
+    # per-tensor occupancy at step end: sorted (tensor id, bytes) pairs
+    # summing exactly to occ_act (trace JSON v3 timelines)
+    occ_tensors: Tuple[Tuple[int, int], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -163,10 +166,13 @@ def lower_subgraph(
         rows_cum += rows_k
         macs_next = (sc.macs * rows_cum) // max(rows_total, 1)
         occ_bytes = occ.advance(produced)
+        occ_tensors = tuple(sorted(
+            (t, b) for t, b in occ.resident_by_tensor().items() if b > 0))
         steps.append(StepTraffic(
             act_in=act_in, act_out=act_out,
             w_stream=stream_at.get(k, 0),
-            macs=macs_next - macs_cum, rows=rows_k, occ_act=occ_bytes))
+            macs=macs_next - macs_cum, rows=rows_k, occ_act=occ_bytes,
+            occ_tensors=occ_tensors))
         macs_cum = macs_next
 
     # region-table layout (the paper's buffer region manager); a streamed

@@ -42,7 +42,10 @@ TRACE_FORMAT = "cocco-trace"
 # v2: multi-core lowering — per-step/per-subgraph ``noc_bytes``, per-core
 # prologue DRAM streams (``core``), and a top-level ``noc`` section with
 # aggregate + per-link fabric profiles
-TRACE_FORMAT_VERSION = 2
+# v3: per-tensor occupancy timelines — each compute step carries
+# ``occ_tensors`` ([tensor id, bytes] pairs summing exactly to ``occ_act``;
+# empty on prologue/weight-only steps)
+TRACE_FORMAT_VERSION = 3
 
 PROLOGUE = -1   # TraceStep.subgraph index of the initial weight load
 WHOLE_CHIP = -1  # TraceStep.core for steps not tied to one core's stream
@@ -65,6 +68,9 @@ class TraceStep:
     macs: int = 0
     noc_bytes: int = 0   # weight bytes broadcast over the core-to-core fabric
     core: int = WHOLE_CHIP  # owning core of a per-core DRAM stream segment
+    # v3: per-tensor activation occupancy at step end — sorted (tensor id,
+    # bytes) pairs summing exactly to occ_act; empty on prologue steps
+    occ_tensors: Tuple[Tuple[int, int], ...] = ()
 
     @property
     def dram_in(self) -> int:
@@ -232,7 +238,8 @@ def _coalesce(steps: List[TraceStep], limit: int) -> List[TraceStep]:
             rows=sum(c.rows for c in chunk),
             macs=sum(c.macs for c in chunk),
             noc_bytes=sum(c.noc_bytes for c in chunk),
-            core=chunk[0].core))
+            core=chunk[0].core,
+            occ_tensors=chunk[-1].occ_tensors))
         start = end
     return out
 
@@ -328,7 +335,8 @@ def simulate_plan(
                 w_in=w_in,
                 occ_act=stp.occ_act, occ_w=own_w + occ_pre,
                 rows=stp.rows, macs=stp.macs,
-                noc_bytes=(share - 1) * w_in))
+                noc_bytes=(share - 1) * w_in,
+                occ_tensors=stp.occ_tensors))
             sub_t += cyc
         if steps_per_subgraph is not None:
             sub_steps = _coalesce(sub_steps, max(1, steps_per_subgraph))
